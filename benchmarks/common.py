@@ -1,0 +1,32 @@
+"""Shared benchmark helpers: wall-clock measurement of jitted callables and
+the paper's delivered-performance reporting (Eq. 1).
+
+CPU measurement note: this container measures *relative* encoding costs on
+one CPU core — exactly the paper's framing ("a metric ... useful to compare
+the relative performance of hardware technologies, rather than ... absolute
+performance").  TPU absolute bounds come from the dry-run roofline instead.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_callable(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+                  **kwargs) -> float:
+    """Median wall seconds of fn(*args) after warmup (jit-compile excluded)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def csv_row(name: str, seconds: float, derived: str) -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

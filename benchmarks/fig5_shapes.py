@@ -1,0 +1,46 @@
+"""Paper Fig 5: delivered performance of the conv encoding as the per-step
+input tensor shape varies {32x64, 64x64, 128x64, 128x128} at fixed total
+problem size — the paper's fabric-utilisation sweep (27%/27%/45%/67% of the
+CS-1).  On TPU the analogue is VMEM-tile occupancy; on this CPU we measure
+the relative throughput and report the paper's metric.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DeliveredPerf,
+    DirichletBC,
+    conv_jacobi_2d,
+    encoding_flops_per_point,
+    laplace_jacobi,
+)
+from benchmarks.common import csv_row, time_callable
+
+SHAPES = [(32, 64), (64, 64), (128, 64), (128, 128)]
+
+
+def run(total_elements: int = 2 * 64 * 64 * 8, iters: int = 100):
+    spec = laplace_jacobi(2)
+    bc = DirichletBC(1.0)
+    rng = np.random.default_rng(0)
+    rows = []
+    for grid in SHAPES:
+        n = grid[0] * grid[1]
+        steps = max(1, total_elements // n)
+        x = jnp.asarray(rng.standard_normal((steps, *grid)), jnp.float32)
+        f = jax.jit(lambda xx: conv_jacobi_2d(xx, spec, bc, iters))
+        sec = time_callable(f, x)
+        perf = DeliveredPerf(n * steps, encoding_flops_per_point(spec, "conv"),
+                             7, iters, sec)
+        rows.append(csv_row(f"fig5/{grid[0]}x{grid[1]}", sec,
+                            f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
+                            f"{steps} steps x {n} elems"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

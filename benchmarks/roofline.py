@@ -1,0 +1,105 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS §Roofline).
+
+Per (arch × shape × mesh) cell, from artifacts/dryrun/*.json:
+
+  compute term    = flops_per_device / 197 TFLOP/s          (bf16 peak, v5e)
+  memory term     = hbm_bytes_per_device / 819 GB/s
+  collective term = collective_operand_bytes_per_device / 50 GB/s/link
+
+All three use the trip-count-aware HLO analysis (launch/hlo_cost.py) of the
+SPMD-partitioned program, so they are per-device quantities; the dominant
+term bounds the step time.  MODEL_FLOPS = 6·N_active·D (train) or
+2·N_active·D (serve) gives the useful-compute fraction; roofline fraction =
+MODEL_FLOPS_per_device/peak ÷ dominant-term — the score §Perf hillclimbs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s/link (ICI)
+
+
+def load_cells(art_dir: str = "artifacts/dryrun"):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        if "mesh" in rec and "arch" in rec:   # skip e.g. the PP proof record
+            cells.append(rec)
+    return cells
+
+
+def terms(rec: dict) -> dict | None:
+    if rec.get("status") != "OK" or "hlo_cost" not in rec:
+        return None
+    hc = rec["hlo_cost"]
+    n_dev = rec["n_devices"]
+    compute = hc["flops"] / PEAK_FLOPS
+    memory = hc["hbm_bytes"] / HBM_BW
+    collective = hc["collective_bytes_total"] / LINK_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])
+    model_flops_dev = rec["model_flops"] / n_dev
+    useful_ratio = rec["model_flops"] / (hc["flops"] * n_dev) if hc["flops"] else 0.0
+    bound = max(compute, memory, collective)
+    roofline_frac = (model_flops_dev / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant[0], "bound_s": bound,
+        "useful_ratio": useful_ratio, "roofline_frac": roofline_frac,
+        "temp_gb": rec["memory_analysis"]["temp_size_in_bytes"] / 1e9,
+        "args_gb": rec["memory_analysis"]["argument_size_in_bytes"] / 1e9,
+    }
+
+
+def table(art_dir: str = "artifacts/dryrun", mesh: str = "pod16x16") -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful | roofline | temp GB | args GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(art_dir):
+        if rec["mesh"] != mesh:
+            continue
+        key = f"| {rec['arch']} | {rec['shape']} "
+        if rec["status"] == "SKIP":
+            rows.append(key + f"| SKIP — {rec['skip_reason'][:60]} |||||||||")
+            continue
+        t = terms(rec)
+        rows.append(
+            key + f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | **{t['dominant']}** "
+            f"| {t['useful_ratio']:.3f} | {t['roofline_frac']:.3f} "
+            f"| {t['temp_gb']:.1f} | {t['args_gb']:.2f} |")
+    return "\n".join(rows)
+
+
+def run():
+    rows = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        for rec in load_cells():
+            if rec["mesh"] != mesh:
+                continue
+            name = f"roofline/{rec['arch']}/{rec['shape']}/{mesh}"
+            if rec["status"] == "SKIP":
+                rows.append(f"{name},0.0,SKIP")
+                continue
+            t = terms(rec)
+            rows.append(
+                f"{name},{t['bound_s']*1e6:.1f},"
+                f"dom={t['dominant']} useful={t['useful_ratio']:.3f} "
+                f"roofline={t['roofline_frac']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    if len(sys.argv) > 1 and sys.argv[1] == "--markdown":
+        print(table(mesh=sys.argv[2] if len(sys.argv) > 2 else "pod16x16"))
+    else:
+        for r in run():
+            print(r)

@@ -1,0 +1,47 @@
+"""Benchmark runner — one section per paper table/figure plus the roofline.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller step counts (CI)")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig5_shapes, fig6_3d, roofline,
+                            stencil_fuse_sweep, table1_2d)
+
+    sections = {
+        "table1": lambda: table1_2d.run(steps=4 if args.fast else 8,
+                                        iters_conv=20 if args.fast else 100),
+        "fig5": lambda: fig5_shapes.run(iters=20 if args.fast else 100),
+        "fig6": lambda: fig6_3d.run(iters=10 if args.fast else 50),
+        "stencil-fuse": stencil_fuse_sweep.run,
+        "roofline": roofline.run,
+    }
+    failed = 0
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if args.only and name not in args.only:
+            continue
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception:
+            failed += 1
+            print(f"{name},0.0,ERROR", flush=True)
+            traceback.print_exc()
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,87 @@
+"""Paper Table 1: delivered performance for 2D Jacobi (X=Y=64), dense vs
+convolution encodings, fp32 vs bf16 ("mixed") precision.
+
+The paper streams 500k step-tiles to reach a 2048M-element problem; here the
+per-step throughput is measured over a configurable number of steps and the
+delivered-performance metric (Eq. 1) reports GFLOPS from the analytic
+per-encoding FLOP counts (7 useful / 17 conv / 8191 dense per element).
+
+Also reproduces the dense path's iteration-memory analysis: one N² layer per
+iteration limited the CS-1 to 7 iterations (paper §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DirichletBC,
+    DeliveredPerf,
+    build_dense_matrix,
+    conv_jacobi_2d,
+    dense_jacobi,
+    dense_layer_bytes,
+    encoding_flops_per_point,
+    laplace_jacobi,
+)
+from repro.kernels import jacobi2d
+
+from benchmarks.common import csv_row, time_callable
+
+
+def run(steps: int = 8, iters_dense: int = 7, iters_conv: int = 100,
+        grid=(64, 64), kernel_steps: int = 4, kernel_iters: int = 10):
+    spec = laplace_jacobi(2)
+    bc = DirichletBC(1.0)
+    n = grid[0] * grid[1]
+    rng = np.random.default_rng(0)
+    rows = []
+
+    for dtype, label in ((jnp.float32, "fp32"), (jnp.bfloat16, "bf16")):
+        x = jnp.asarray(rng.standard_normal((steps, *grid)), dtype)
+
+        # dense encoding (Algorithm 1): 7 iterations (the CS-1 limit)
+        m = jnp.asarray(build_dense_matrix(grid, spec), dtype)
+        xb = jax.vmap(bc.set_boundary)(x)
+        f_dense = jax.jit(lambda xx: dense_jacobi(xx, m, iters_dense))
+        sec = time_callable(f_dense, xb)
+        perf = DeliveredPerf(n * steps, encoding_flops_per_point(spec, "dense", n),
+                             7, iters_dense, sec)
+        rows.append(csv_row(f"table1/dense/{label}", sec,
+                            f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
+                            f"{perf.useful_gflops:.3f} useful | waste x{perf.waste_ratio:.0f}"))
+
+        # convolution encoding (Algorithm 2), mask-trick BCs
+        f_conv = jax.jit(lambda xx: conv_jacobi_2d(xx, spec, bc, iters_conv,
+                                                   dtype=dtype))
+        sec = time_callable(f_conv, x)
+        perf = DeliveredPerf(n * steps, encoding_flops_per_point(spec, "conv"),
+                             7, iters_conv, sec)
+        rows.append(csv_row(f"table1/conv/{label}", sec,
+                            f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
+                            f"{perf.useful_gflops:.3f} useful | waste x{perf.waste_ratio:.1f}"))
+
+    # direct Pallas stencil (TPU-native re-think; interpret mode on CPU)
+    x = jnp.asarray(rng.standard_normal((kernel_steps, *grid)), jnp.float32)
+    f_k = lambda xx: jacobi2d(xx, spec, bc_value=1.0, iterations=kernel_iters,
+                              block_h=64)
+    sec = time_callable(f_k, x, warmup=1, iters=1)
+    perf = DeliveredPerf(n * kernel_steps,
+                         encoding_flops_per_point(spec, "direct"), 7,
+                         kernel_iters, sec)
+    rows.append(csv_row("table1/pallas-direct/fp32(interp)", sec,
+                        f"{perf.delivered_gflops:.3f} delivered GFLOPS | "
+                        f"waste x{perf.waste_ratio:.2f} (interpret mode)"))
+
+    # the dense path's layer-memory wall (paper: 7 iterations max on CS-1)
+    for it in (7, 8):
+        mb = dense_layer_bytes(grid, it) / 1e6
+        rows.append(csv_row(f"table1/dense-layer-mem/{it}iters", 0.0,
+                            f"{mb:.0f} MB of N^2 layers"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,78 @@
+"""3D heat diffusion with non-zero Dirichlet boundary conditions — the paper's
+Fig 6 scenario (X=64, Y=64, Z=10) through the channels-trick Conv2D encoding
+and the native paths the CS-1 could not express; optionally distributed over
+a device grid with halo exchange.
+
+  PYTHONPATH=src python examples/heat3d.py [--distributed]
+
+(--distributed needs >1 jax device; run under
+ XLA_FLAGS=--xla_force_host_platform_device_count=8 to try it on CPU.)
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DirichletBC,
+    conv_jacobi_3d_channels,
+    conv_jacobi_3d_native,
+    jacobi_reference,
+    laplace_jacobi,
+)
+from repro.kernels import jacobi3d
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--iters", type=int, default=50)
+    args = ap.parse_args()
+
+    spec = laplace_jacobi(3)
+    bc_value = 100.0  # hot walls
+    bc = DirichletBC(bc_value)
+    grid = (10, 64, 64)
+    rng = np.random.default_rng(0)
+    x0 = jnp.zeros((1, *grid), jnp.float32)
+
+    print(f"== 3D heat, grid (Z,X,Y)={grid}, walls at {bc_value} ==")
+    ref = jnp.stack([jacobi_reference(x0[0], spec, bc, args.iters)])
+
+    ch = conv_jacobi_3d_channels(x0, spec, bc, args.iters)
+    nat = conv_jacobi_3d_native(x0, spec, bc, args.iters)
+    ker = jacobi3d(x0, spec, bc_value=bc_value, iterations=args.iters,
+                   block_x=32)
+    print(f"channels-trick  err={float(jnp.abs(ch - ref).max()):.2e}")
+    print(f"native conv3d   err={float(jnp.abs(nat - ref).max()):.2e}")
+    print(f"pallas direct   err={float(jnp.abs(ker - ref).max()):.2e}")
+    centre = ch[0, grid[0] // 2, grid[1] // 2, grid[2] // 2]
+    print(f"centre temperature after {args.iters} iters: {float(centre):.3f} "
+          f"(walls {bc_value}) — heat diffusing inward ✓")
+
+    if args.distributed:
+        n = len(jax.devices())
+        if n < 2:
+            print("(--distributed skipped: single device)")
+            return
+        from repro.core.distributed import make_distributed_jacobi
+        # distribute the 2D X-Y plane of the mid-Z slice problem
+        mesh = jax.make_mesh((2, n // 2), ("data", "model"))
+        spec2 = laplace_jacobi(2)
+        run = make_distributed_jacobi(mesh, spec2, H=64, W=64,
+                                      bc_value=bc_value,
+                                      iterations=args.iters)
+        x2 = jnp.zeros((2, 64, 64), jnp.float32)
+        out = run(x2)
+        ref2 = jnp.stack([jacobi_reference(x2[i], spec2, DirichletBC(bc_value),
+                                           args.iters) for i in range(2)])
+        print(f"distributed halo-exchange (mesh {dict(mesh.shape)}) "
+              f"err={float(jnp.abs(out - ref2).max()):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Mesh-shape-independent checkpointing with async flush.
+
+Checkpoints store the *logical* (unsharded) arrays as one .npz per step plus
+a manifest; on restore the arrays are placed under whatever sharding the
+*current* mesh dictates — so a run checkpointed on 512 chips restarts on 256
+(or 8) unchanged: the elastic property tests/test_checkpoint.py asserts.
+
+At 10B+ scale a real deployment writes per-shard files through a storage
+fanout; the logical format here keeps the semantics (reshard-on-load) that
+the fault-tolerance layer needs, on one host.  Writes go to a temp file then
+os.replace — a crash mid-write never corrupts the latest checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{_SEP}{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{_SEP}{i}" if prefix else str(i)))
+    else:
+        out[prefix] = np.asarray(jax.device_get(tree))
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Any:
+    tree: dict = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+class Checkpointer:
+    """save(step, tree) / restore_latest() with an async writer thread."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        flat = _flatten(tree)  # device_get happens on the caller thread
+
+        def write():
+            # np.savez appends ".npz" unless the name already ends with it
+            tmp = self._path(step) + ".tmp.npz"
+            np.savez(tmp, **flat)
+            os.replace(tmp, self._path(step))
+            with open(os.path.join(self.dir, "manifest.json"), "w") as f:
+                json.dump({"latest_step": step}, f)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        ckpts = sorted(f for f in os.listdir(self.dir) if f.startswith("ckpt_")
+                       and f.endswith(".npz"))
+        for old in ckpts[: -self.keep]:
+            os.remove(os.path.join(self.dir, old))
+
+    def latest_step(self) -> int | None:
+        m = os.path.join(self.dir, "manifest.json")
+        if not os.path.exists(m):
+            return None
+        with open(m) as f:
+            return json.load(f)["latest_step"]
+
+    def restore(self, step: int, shardings: Any | None = None) -> Any:
+        self.wait()
+        with np.load(self._path(step)) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten(flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda arr, sh: jax.device_put(arr, sh), tree, shardings)
+        return tree
+
+    def restore_latest(self, shardings: Any | None = None) -> tuple[int, Any] | None:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return step, self.restore(step, shardings)

@@ -1,0 +1,24 @@
+"""Architecture configs: the ten assigned archs + the paper's Jacobi configs.
+
+``get_config(arch_id)`` returns the exact full-size config; ``smoke=True``
+returns the reduced same-family variant used by CPU smoke tests.
+"""
+from repro.configs.base import ModelConfig, get_config, list_archs
+
+# Import for registration side effects.
+from repro.configs import (  # noqa: F401
+    glm4_9b,
+    mamba2_370m,
+    moonshot_v1_16b_a3b,
+    nemotron_4_15b,
+    phi3_medium_14b,
+    qwen2_vl_2b,
+    qwen3_0_6b,
+    qwen3_moe_30b_a3b,
+    whisper_tiny,
+    zamba2_1_2b,
+)
+from repro.configs.jacobi import JACOBI_CONFIGS, JacobiConfig
+
+__all__ = ["ModelConfig", "get_config", "list_archs", "JacobiConfig",
+           "JACOBI_CONFIGS"]

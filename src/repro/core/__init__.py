@@ -1,0 +1,57 @@
+"""The paper's primary contribution: stencil computation expressed through
+tensor-program primitives (dense layers, convolutions) plus the TPU-native
+re-think (direct Pallas stencils, temporal blocking, halo-exchange
+distribution).  See DESIGN.md §1-2.
+"""
+from repro.core.boundary import BoundaryMode, DirichletBC
+from repro.core.conv1d import causal_conv1d, causal_conv1d_update
+from repro.core.conv_encoding import (
+    conv2d_kernel,
+    conv3d_channels_kernel,
+    conv3d_kernel,
+    conv_jacobi_2d,
+    conv_jacobi_3d_channels,
+    conv_jacobi_3d_native,
+)
+from repro.core.dense_encoding import (
+    build_dense_matrix,
+    dense_jacobi,
+    dense_jacobi_with_bc,
+    dense_layer_bytes,
+)
+from repro.core.metrics import DeliveredPerf, encoding_flops_per_point
+from repro.core.reference import apply_stencil, jacobi_reference, jacobi_step
+from repro.core.stencil import (
+    StencilSpec,
+    box,
+    causal_conv1d_spec,
+    laplace_jacobi,
+    star,
+)
+
+__all__ = [
+    "BoundaryMode",
+    "DirichletBC",
+    "StencilSpec",
+    "apply_stencil",
+    "box",
+    "build_dense_matrix",
+    "causal_conv1d",
+    "causal_conv1d_spec",
+    "causal_conv1d_update",
+    "conv2d_kernel",
+    "conv3d_channels_kernel",
+    "conv3d_kernel",
+    "conv_jacobi_2d",
+    "conv_jacobi_3d_channels",
+    "conv_jacobi_3d_native",
+    "dense_jacobi",
+    "dense_jacobi_with_bc",
+    "dense_layer_bytes",
+    "DeliveredPerf",
+    "encoding_flops_per_point",
+    "jacobi_reference",
+    "jacobi_step",
+    "laplace_jacobi",
+    "star",
+]

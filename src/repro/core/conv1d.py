@@ -1,0 +1,49 @@
+"""Causal depthwise 1D convolution expressed through the stencil engine.
+
+This is the integration point between the paper's technique and the SSM
+architectures (mamba2-370m, zamba2-1.2b): the d_conv=4 depthwise causal conv
+inside every Mamba2 block is a 1D stencil.  Per the paper's conv encoding it
+is applied as a sliding window; causality = 'valid' padding with an explicit
+left halo (the paper's manual-padding workaround, here legitimate since the
+halo is the recurrent conv state during decode).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def causal_conv1d(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x: (batch, seq, channels); weight: (K, channels) depthwise taps.
+
+    out[b, t, c] = sum_k w[k, c] * x[b, t - (K-1) + k, c]   (zero left-pad)
+    """
+    K = weight.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # Shifted-add form (the stencil engine's direct application): K shifted
+    # views, weighted and summed — identical math to a depthwise conv but
+    # maps to fused adds rather than an im2col matmul.
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    seq = x.shape[1]
+    for k in range(K):
+        out = out + pad[:, k : k + seq, :].astype(jnp.float32) * weight[k].astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d_update(
+    state: jnp.ndarray, x_t: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token decode step.
+
+    state: (batch, K-1, channels) — the left halo (last K-1 inputs).
+    x_t:   (batch, channels) — the new input.
+    Returns (new_state, out_t).
+    """
+    K = weight.shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), weight.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    new_state = window[:, 1:, :]
+    return new_state.astype(state.dtype), out.astype(x_t.dtype)

@@ -1,0 +1,195 @@
+"""Convolution-layer encoding of a stencil (paper Algorithm 2, Figures 2-4).
+
+2D: the stencil's footprint window slides over the input
+(``lax.conv_general_dilated``, NCHW / channels-first — the only layout the
+CS-1 supported).  Non-zero Dirichlet BCs use the paper's mask trick
+(BoundaryMode.MASK) because the Cerebras stack lacked ``tf.pad``; JAX has
+``pad`` so BoundaryMode.PAD is also provided and compared in §Perf.
+
+3D: the CS-1 only had Conv2D, so the third dimension maps onto the
+*channels* axis (paper Figures 3-4).  A (dz,dx,dy) tap with weight w becomes
+kernel[z_out, z_out+dz, 1+dx, 1+dy] = w — a banded Z_out×Z_in channel-mixing
+matrix.  Z_out=Z_in=Z keeps the output 3D (Figure 4).  The band is dense in
+storage: Z²·9 weights instead of 7, overhead we quantify against native 3D
+conv in EXPERIMENTS §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.boundary import BoundaryMode, DirichletBC
+from repro.core.stencil import StencilSpec
+
+
+# ---------------------------------------------------------------------------
+# 2D conv encoding
+# ---------------------------------------------------------------------------
+
+def conv2d_kernel(spec: StencilSpec, dtype=np.float32) -> np.ndarray:
+    """OIHW kernel (1,1,kh,kw) — Figure 2 of the paper for 2D Laplace."""
+    if spec.ndim != 2:
+        raise ValueError("conv2d_kernel needs a 2D spec")
+    return spec.to_kernel(dtype)[None, None]
+
+
+def conv2d_apply(x: jnp.ndarray, kernel: jnp.ndarray, padding: str = "SAME") -> jnp.ndarray:
+    """One conv application.  x: (batch, C, H, W); kernel: OIHW."""
+    return jax.lax.conv_general_dilated(
+        x,
+        kernel.astype(x.dtype),
+        window_strides=(1, 1),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "mode"))
+def _conv_jacobi_2d(x, kernel, mask, bc_grid, iterations, mode):
+    kh = kernel.shape[2]
+    pad = (kh - 1) // 2
+
+    if mode is BoundaryMode.MASK:
+        def body(x, _):
+            y = conv2d_apply(x, kernel, "SAME")
+            # Paper §3: zero the convolved boundary, add the BC values back.
+            y = y * mask + bc_grid
+            return y, None
+    elif mode is BoundaryMode.PAD:
+        def body(x, _):
+            # 'valid' conv on the interior; boundary shell re-written from x
+            # itself (it holds the Dirichlet values, which never change).
+            inner = conv2d_apply(x, kernel, "VALID")
+            y = jnp.pad(inner, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+            y = y * mask + x * (1.0 - mask)
+            return y, None
+    else:
+        raise ValueError(f"unsupported mode for conv encoding: {mode}")
+
+    x, _ = jax.lax.scan(body, x, None, length=iterations)
+    return x
+
+
+def conv_jacobi_2d(
+    x0: jnp.ndarray,
+    spec: StencilSpec,
+    bc: DirichletBC,
+    iterations: int,
+    mode: BoundaryMode = BoundaryMode.MASK,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Algorithm 2 of the paper.  x0: (batch, H, W) → (batch, H, W)."""
+    if mode is BoundaryMode.PAD and spec.radius != 1:
+        # With a 1-cell boundary shell, 'valid'+re-pad only reconstructs the
+        # zero-padded semantics for radius-1 stencils; use MASK otherwise.
+        raise ValueError("BoundaryMode.PAD requires a radius-1 stencil")
+    batch = x0.shape[0]
+    grid = x0.shape[1:]
+    kernel = jnp.asarray(conv2d_kernel(spec), dtype=dtype)
+    x = jax.vmap(bc.set_boundary)(x0.astype(dtype))[:, None]  # (B,1,H,W)
+    mask = bc.interior_mask(grid, dtype)[None, None]
+    bcg = bc.bc_grid(grid, dtype)[None, None]
+    out = _conv_jacobi_2d(x, kernel, mask, bcg, iterations, mode)
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# 3D via Conv2D channels (paper Figures 3-4)
+# ---------------------------------------------------------------------------
+
+def conv3d_channels_kernel(spec: StencilSpec, depth: int, dtype=np.float32) -> np.ndarray:
+    """OIHW kernel (Z, Z, kh, kw) encoding a 3D stencil in Conv2D channels.
+
+    Offsets are (dz, dx, dy): dz indexes the channel band, (dx,dy) the 2D
+    window.  Output channel z reads input channels z+dz — the banded matrix
+    of paper Figure 4.
+    """
+    if spec.ndim != 3:
+        raise ValueError("conv3d_channels_kernel needs a 3D spec")
+    fz, fx, fy = spec.footprint
+    lo = [min(off[d] for off, _ in spec.taps) for d in range(3)]
+    ker = np.zeros((depth, depth, fx, fy), dtype=dtype)
+    for (dz, dx, dy), w in spec.taps:
+        for z_out in range(depth):
+            z_in = z_out + dz
+            if 0 <= z_in < depth:
+                ker[z_out, z_in, dx - lo[1], dy - lo[2]] += w
+    return ker
+
+
+@functools.partial(jax.jit, static_argnames=("iterations",))
+def _conv_jacobi_3d_channels(x, kernel, mask, bc_grid, iterations):
+    def body(x, _):
+        y = conv2d_apply(x, kernel, "SAME")
+        y = y * mask + bc_grid
+        return y, None
+    x, _ = jax.lax.scan(body, x, None, length=iterations)
+    return x
+
+
+def conv_jacobi_3d_channels(
+    x0: jnp.ndarray,
+    spec: StencilSpec,
+    bc: DirichletBC,
+    iterations: int,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Paper's 3D approach.  x0: (batch, Z, X, Y); Z rides the channel axis.
+
+    Note the channel band handles dz internally, so the *mask* must treat the
+    Z faces as boundary too — the mask/bc grids are built on the full 3D
+    shape and broadcast as (1, Z, X, Y).
+    """
+    batch = x0.shape[0]
+    grid = x0.shape[1:]  # (Z, X, Y)
+    kernel = jnp.asarray(conv3d_channels_kernel(spec, depth=grid[0]), dtype=dtype)
+    x = jax.vmap(bc.set_boundary)(x0.astype(dtype))  # (B,Z,X,Y): Z = channels
+    mask = bc.interior_mask(grid, dtype)[None]
+    bcg = bc.bc_grid(grid, dtype)[None]
+    return _conv_jacobi_3d_channels(x, kernel, mask, bcg, iterations)
+
+
+# ---------------------------------------------------------------------------
+# Native 3D conv (beyond-paper: what the CS-1 stack could not express)
+# ---------------------------------------------------------------------------
+
+def conv3d_kernel(spec: StencilSpec, dtype=np.float32) -> np.ndarray:
+    """OIDHW kernel (1,1,kz,kx,ky) for a native 3D convolution."""
+    if spec.ndim != 3:
+        raise ValueError("conv3d_kernel needs a 3D spec")
+    return spec.to_kernel(dtype)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("iterations",))
+def _conv_jacobi_3d_native(x, kernel, mask, bc_grid, iterations):
+    def body(x, _):
+        y = jax.lax.conv_general_dilated(
+            x, kernel.astype(x.dtype), (1, 1, 1), "SAME",
+            dimension_numbers=("NCDHW", "OIDHW", "NCDHW"),
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)
+        y = y * mask + bc_grid
+        return y, None
+    x, _ = jax.lax.scan(body, x, None, length=iterations)
+    return x
+
+
+def conv_jacobi_3d_native(
+    x0: jnp.ndarray,
+    spec: StencilSpec,
+    bc: DirichletBC,
+    iterations: int,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Native Conv3D path — the encoding the paper could not use on the CS-1."""
+    grid = x0.shape[1:]
+    kernel = jnp.asarray(conv3d_kernel(spec), dtype=dtype)
+    x = jax.vmap(bc.set_boundary)(x0.astype(dtype))[:, None]  # (B,1,Z,X,Y)
+    mask = bc.interior_mask(grid, dtype)[None, None]
+    bcg = bc.bc_grid(grid, dtype)[None, None]
+    out = _conv_jacobi_3d_native(x, kernel, mask, bcg, iterations)
+    return out[:, 0]

@@ -1,0 +1,101 @@
+"""Dense-layer encoding of a stencil (paper Algorithm 1 / Figure 1).
+
+The grid is flattened to a vector of length N and one Jacobi iteration becomes
+a matrix–vector product with an N×N matrix W:
+
+    out_flat = x_flat @ W,    W[j, i] = weight of x_j's contribution to out_i
+
+Boundary conditions are encoded *inside the matrix*: rows/cols for boundary
+cells form an identity block, so Dirichlet values persist through iterations
+with no extra ops (the paper's stated advantage of this encoding).
+
+The cost is what the paper measures: the matrix is O(N²) storage and one
+iteration performs (2N-1) FLOPs per output element, nearly all redundant
+(8191 vs 7 useful for X=Y=64).  We reproduce it faithfully — including the
+"one layer per iteration" memory model that limited the CS-1 to 7 iterations
+— and expose the waste in the roofline (EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.boundary import DirichletBC
+from repro.core.stencil import StencilSpec
+
+
+def build_dense_matrix(
+    grid_shape: tuple[int, ...], spec: StencilSpec, dtype=np.float32
+) -> np.ndarray:
+    """Materialize the N×N stencil matrix with identity boundary rows.
+
+    Matches Figure 1 of the paper for 2D Laplace with X=Y=3: the only
+    non-identity row is the interior cell, holding 0.25 at its four
+    neighbours.
+    """
+    if spec.ndim != len(grid_shape):
+        raise ValueError(f"spec is {spec.ndim}D but grid is {len(grid_shape)}D")
+    n = int(np.prod(grid_shape))
+    w = np.zeros((n, n), dtype=dtype)
+    interior = np.zeros(grid_shape, dtype=bool)
+    interior[tuple(slice(1, -1) for _ in grid_shape)] = True
+
+    strides = np.array([int(np.prod(grid_shape[d + 1 :])) for d in range(len(grid_shape))])
+    for flat_i in range(n):
+        idx = np.unravel_index(flat_i, grid_shape)
+        if not interior[idx]:
+            # Boundary cell: identity row — BC value persists (paper Fig 1).
+            w[flat_i, flat_i] = 1.0
+            continue
+        for off, weight in spec.taps:
+            nbr = np.array(idx) + np.array(off)
+            flat_j = int(np.dot(nbr, strides))
+            w[flat_j, flat_i] += weight  # column = output, row = input (x @ W)
+    return w
+
+
+@functools.partial(jax.jit, static_argnames=("iterations",))
+def dense_jacobi(
+    x0: jnp.ndarray, matrix: jnp.ndarray, iterations: int
+) -> jnp.ndarray:
+    """Algorithm 1: flatten, then ``iterations`` dense-layer applications.
+
+    ``x0`` has shape (batch, *grid_shape).  The matmul accumulates in fp32
+    (mixed precision, as on the CS-1).
+    """
+    batch = x0.shape[0]
+    grid_shape = x0.shape[1:]
+    x = x0.reshape(batch, -1)
+    def body(x, _):
+        y = jnp.matmul(x, matrix, preferred_element_type=jnp.float32)
+        return y.astype(x0.dtype), None
+    x, _ = jax.lax.scan(body, x, None, length=iterations)
+    return x.reshape(batch, *grid_shape)
+
+
+def dense_jacobi_with_bc(
+    x0: jnp.ndarray,
+    spec: StencilSpec,
+    bc: DirichletBC,
+    iterations: int,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Convenience wrapper: build matrix, seed BCs into x0, iterate."""
+    grid_shape = x0.shape[1:]
+    matrix = jnp.asarray(build_dense_matrix(grid_shape, spec), dtype=dtype)
+    x0 = jax.vmap(bc.set_boundary)(x0.astype(dtype))
+    return dense_jacobi(x0, matrix, iterations)
+
+
+def dense_layer_bytes(grid_shape: tuple[int, ...], iterations: int, bytes_per_el: int = 2) -> int:
+    """Memory the CS-1 model needed: one N² layer *per iteration* (paper §4).
+
+    Reproduces the 7-iteration limit analytically: with N=4096 and fp16,
+    7 iterations ≈ 235 MB of layer weights — at 27% fabric utilisation the
+    Cerebras compiler could not place an 8th layer.
+    """
+    n = int(np.prod(grid_shape))
+    return n * n * bytes_per_el * iterations

@@ -1,0 +1,56 @@
+"""Pure-jnp direct stencil application — the oracle every encoding must match.
+
+``apply_stencil`` computes the operator by shifted adds (no conv, no matmul),
+with explicit Dirichlet boundary handling.  All encodings (dense, conv,
+Pallas kernels, distributed halo-exchange) are validated against this.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.boundary import DirichletBC
+from repro.core.stencil import StencilSpec
+
+
+def _shift(x: jnp.ndarray, offset: tuple[int, ...]) -> jnp.ndarray:
+    """x shifted so result[i] = x[i + offset], zero-filled at the edges."""
+    for d, o in enumerate(offset):
+        if o == 0:
+            continue
+        n = x.shape[d]
+        pad = [(0, 0)] * x.ndim
+        if o > 0:
+            # result[i] = x[i+o]: drop the first o, pad at the end.
+            sl = [slice(None)] * x.ndim
+            sl[d] = slice(o, n)
+            pad[d] = (0, o)
+        else:
+            sl = [slice(None)] * x.ndim
+            sl[d] = slice(0, n + o)
+            pad[d] = (-o, 0)
+        x = jnp.pad(x[tuple(sl)], pad)
+    return x
+
+
+def apply_stencil(x: jnp.ndarray, spec: StencilSpec) -> jnp.ndarray:
+    """One raw stencil application with zero (implicit) padding outside."""
+    acc = jnp.zeros_like(x)
+    for off, w in spec.taps:
+        acc = acc + jnp.asarray(w, x.dtype) * _shift(x, off)
+    return acc
+
+
+def jacobi_step(x: jnp.ndarray, spec: StencilSpec, bc: DirichletBC) -> jnp.ndarray:
+    """One Jacobi iteration with Dirichlet BCs: interior updated, shell held."""
+    out = apply_stencil(x, spec)
+    return bc.apply_mask_trick(out)
+
+
+def jacobi_reference(
+    x0: jnp.ndarray, spec: StencilSpec, bc: DirichletBC, iterations: int
+) -> jnp.ndarray:
+    """``iterations`` Jacobi steps, plain Python loop (oracle — not for perf)."""
+    x = bc.set_boundary(x0)
+    for _ in range(iterations):
+        x = jacobi_step(x, spec, bc)
+    return x

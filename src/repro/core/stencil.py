@@ -1,0 +1,156 @@
+"""Stencil specification — the paper's computational object.
+
+A stencil is a fixed pattern of weighted contributions from neighbouring grid
+cells (paper §2): ``out[i] = sum_k w_k * x[i + off_k]``.  The paper's running
+example is the Jacobi update for Laplace's equation for diffusion:
+
+  2D (5-point):  out[i,j]   = 0.25*(x[i-1,j] + x[i+1,j] + x[i,j-1] + x[i,j+1])
+  3D (7-point):  out[i,j,k] = (1/6)*(six face neighbours)
+
+``StencilSpec`` is dimension-agnostic: offsets are integer tuples, weights are
+floats.  Encodings (dense / conv / Pallas kernels) consume the same spec, so
+every backend computes the same operator and can be cross-validated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+Offset = tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """A fixed neighbourhood-weight pattern.
+
+    Attributes:
+      taps: tuple of (offset, weight) pairs — offset is an integer tuple (one
+        entry per grid dim), weight the float contribution of that neighbour.
+        A Mapping may be passed at construction; it is canonicalized to a
+        sorted tuple so the spec is hashable (jit-static).
+      name: for reporting.
+    """
+
+    taps: tuple[tuple[Offset, float], ...]
+    name: str = "stencil"
+
+    def __post_init__(self):
+        taps = self.taps
+        if isinstance(taps, Mapping):
+            taps = tuple(sorted((tuple(o), float(w)) for o, w in taps.items()))
+        else:
+            taps = tuple(sorted((tuple(o), float(w)) for o, w in taps))
+        object.__setattr__(self, "taps", taps)
+        ndims = {len(o) for o, _ in self.taps}
+        if len(ndims) != 1:
+            raise ValueError(f"inconsistent offset ranks in {self.name}: {ndims}")
+
+    @property
+    def ndim(self) -> int:
+        return len(self.taps[0][0])
+
+    @property
+    def radius(self) -> int:
+        """Max Chebyshev distance of any tap — the halo depth one application needs."""
+        return max(max(abs(c) for c in off) for off, _ in self.taps)
+
+    @property
+    def footprint(self) -> tuple[int, ...]:
+        """Bounding-box shape of the kernel window (2r+1 per dim for symmetric taps)."""
+        lo = [min(off[d] for off, _ in self.taps) for d in range(self.ndim)]
+        hi = [max(off[d] for off, _ in self.taps) for d in range(self.ndim)]
+        return tuple(h - l + 1 for l, h in zip(lo, hi))
+
+    @property
+    def useful_flops_per_point(self) -> int:
+        """FLOPs that contribute to the result: one mul per tap + (taps-1) adds.
+
+        For 2D Laplace (4 taps) this is 7 = 4 mul + 3 add, matching §4 of the
+        paper ("7 useful calculations ... four multiplications and three
+        additions").
+        """
+        n = len(self.taps)
+        return 2 * n - 1
+
+    def delivered_flops_per_point_conv(self) -> int:
+        """FLOPs the *conv encoding* performs per output element.
+
+        The conv kernel covers the full footprint including zero taps: one mul
+        per window element + (window-1) adds.  For the 3×3 2D Laplace window
+        this is 17, matching §4 of the paper.
+        """
+        w = int(np.prod(self.footprint))
+        return 2 * w - 1
+
+    def delivered_flops_per_point_dense(self, n_total: int) -> int:
+        """FLOPs the *dense encoding* performs per output element: (2N-1).
+
+        With X=Y=64 ⇒ N=4096 this is 8191, matching §4 of the paper.
+        """
+        return 2 * n_total - 1
+
+    def to_kernel(self, dtype=np.float32) -> np.ndarray:
+        """Materialize the footprint window as a dense array (the conv kernel).
+
+        Figure 2 of the paper: for 2D Laplace this is the 3×3 array with 0.25
+        on the four faces and zeros elsewhere.
+        """
+        lo = [min(off[d] for off, _ in self.taps) for d in range(self.ndim)]
+        ker = np.zeros(self.footprint, dtype=dtype)
+        for off, w in self.taps:
+            idx = tuple(o - l for o, l in zip(off, lo))
+            ker[idx] = w
+        return ker
+
+
+def laplace_jacobi(ndim: int) -> StencilSpec:
+    """The paper's benchmark stencil: Jacobi iteration for Laplace's equation."""
+    w = 1.0 / (2 * ndim)
+    taps = {}
+    for d in range(ndim):
+        for s in (-1, 1):
+            off = [0] * ndim
+            off[d] = s
+            taps[tuple(off)] = w
+    return StencilSpec(taps=taps, name=f"laplace{ndim}d")
+
+
+def star(ndim: int, weights_by_distance: Sequence[float], center: float = 0.0) -> StencilSpec:
+    """Star stencil of arbitrary radius (e.g. higher-order finite differences)."""
+    taps = {}
+    if center != 0.0:
+        taps[(0,) * ndim] = center
+    for r, w in enumerate(weights_by_distance, start=1):
+        if w == 0.0:
+            continue
+        for d in range(ndim):
+            for s in (-r, r):
+                off = [0] * ndim
+                off[d] = s
+                taps[tuple(off)] = w
+    return StencilSpec(taps=taps, name=f"star{ndim}d_r{len(weights_by_distance)}")
+
+
+def box(ndim: int, weight: float | None = None) -> StencilSpec:
+    """Dense (2r+1)^ndim box average — a stencil with no zero taps."""
+    n = 3**ndim
+    w = weight if weight is not None else 1.0 / n
+    taps = {}
+    for idx in np.ndindex(*(3,) * ndim):
+        off = tuple(i - 1 for i in idx)
+        taps[off] = w
+    return StencilSpec(taps=taps, name=f"box{ndim}d")
+
+
+def causal_conv1d_spec(weights: Sequence[float]) -> StencilSpec:
+    """1D causal stencil: out[t] = sum_k w[k] * x[t - (K-1) + k].
+
+    This is the depthwise causal convolution inside Mamba2 blocks (d_conv=4)
+    expressed as a stencil — the integration point between the paper's
+    technique and the SSM architectures (DESIGN §4).
+    """
+    K = len(weights)
+    taps = {(-(K - 1) + k,): float(w) for k, w in enumerate(weights)}
+    return StencilSpec(taps=taps, name=f"causal_conv1d_k{K}")

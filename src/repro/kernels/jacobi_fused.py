@@ -1,0 +1,122 @@
+"""Temporally-blocked Jacobi Pallas kernel — T iterations per HBM round-trip.
+
+The WSE's decisive advantage for stencils is that the whole grid stays in
+on-chip SRAM across *all* iterations; a naive TPU conv pipeline streams the
+grid HBM→VMEM→HBM every iteration, so at 7 FLOP per 8 streamed bytes it is
+hopelessly memory-bound (arithmetic intensity ~0.9 vs the ~240 FLOP/byte
+ridge of a v5e).  Temporal blocking is the TPU-native answer (DESIGN §2):
+each VMEM tile carries a halo of depth T·r and applies the stencil T times
+before writing back, multiplying arithmetic intensity by ~T at the cost of
+O(T·r) redundant rim compute (the classic trapezoid/overlapped-tiling
+scheme).
+
+Correctness of the trapezoid: after iteration t, only points ≥ (T−t)·r rows
+inside the block rim are valid — the final (block_h, W) centre is exactly
+valid after T iterations.  In-array interior points never read out-of-array
+points (the Dirichlet shell separates them), so the rim garbage never
+propagates inward; the shell itself is re-pinned to the BC value every
+iteration by the fused mask trick.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.stencil import StencilSpec
+from repro.kernels.stencil2d import _round_up, _shift2d
+
+
+def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, T: int,
+            block_h: int, H: int, W: int, bc_value: float | None):
+    i = pl.program_id(1)
+    xb = x_ref[0].astype(jnp.float32)  # (block_h + 2Tr, Wp + 2Tr)
+    halo = T * r
+    row0 = i * block_h - halo  # global row of xb[0, 0]
+    col0 = -halo
+
+    def coords(shape, ro, co):
+        rows = ro + jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+        cols = co + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+        return rows, cols
+
+    rows, cols = coords(xb.shape, row0, col0)
+    in_array = (rows >= 0) & (rows < H) & (cols >= 0) & (cols < W)
+    xb = jnp.where(in_array, xb, 0.0)
+    if bc_value is not None:
+        shell = in_array & ~(
+            (rows >= 1) & (rows < H - 1) & (cols >= 1) & (cols < W - 1)
+        )
+        xb = jnp.where(shell, np.float32(bc_value), xb)
+
+    for t in range(T):
+        acc = None
+        for off, wgt in spec.taps:
+            term = _shift2d(xb, off[0], off[1], r) * np.float32(wgt)
+            acc = term if acc is None else acc + term
+        row0 += r
+        col0 += r
+        rows, cols = coords(acc.shape, row0, col0)
+        in_array = (rows >= 0) & (rows < H) & (cols >= 0) & (cols < W)
+        acc = jnp.where(in_array, acc, 0.0)
+        if bc_value is not None:
+            shell = in_array & ~(
+                (rows >= 1) & (rows < H - 1) & (cols >= 1) & (cols < W - 1)
+            )
+            acc = jnp.where(shell, np.float32(bc_value), acc)
+        xb = acc
+
+    o_ref[0] = xb.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "fuse", "block_h", "bc_value", "interpret"),
+)
+def jacobi2d_fused_step(
+    x: jnp.ndarray,
+    spec: StencilSpec,
+    *,
+    fuse: int,
+    block_h: int = 256,
+    bc_value: float | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """``fuse`` Jacobi iterations in one kernel pass.  x: (batch, H, W).
+
+    Assumes the Dirichlet shell of x is already set (wrapper does this);
+    with bc_value=None computes ``fuse`` raw zero-padded stencil steps.
+    """
+    if spec.ndim != 2:
+        raise ValueError("jacobi2d_fused_step needs a 2D spec")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, H, W = x.shape
+    r = spec.radius
+    halo = fuse * r
+    bh = min(block_h, _round_up(H, 8))
+    Hp = _round_up(H, bh)
+    Wp = _round_up(W, 128)
+    xp = jnp.pad(x, ((0, 0), (0, Hp - H), (0, Wp - W)))
+
+    kern = functools.partial(
+        _kernel, spec=spec, r=r, T=fuse, block_h=bh, H=H, W=W, bc_value=bc_value
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Hp // bh),
+        in_specs=[
+            pl.BlockSpec(
+                (1, pl.Element(bh + 2 * halo, padding=(halo, halo)),
+                 pl.Element(Wp + 2 * halo, padding=(halo, halo))),
+                lambda b, i: (b, i * bh, 0),
+            )
+        ],
+        out_specs=pl.BlockSpec((1, bh, Wp), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hp, Wp), x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:, :H, :W]

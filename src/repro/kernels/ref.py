@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are deliberately naive (shifted adds / plain matmul) and are the
+ground truth for the per-kernel allclose sweeps in tests/test_kernels_*.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.boundary import DirichletBC
+from repro.core.reference import apply_stencil
+from repro.core.stencil import StencilSpec
+
+
+def stencil2d_ref(x: jnp.ndarray, spec: StencilSpec) -> jnp.ndarray:
+    """Raw 2D stencil, zero padding.  x: (batch, H, W)."""
+    return jnp.stack([apply_stencil(x[i], spec) for i in range(x.shape[0])])
+
+
+def stencil3d_ref(x: jnp.ndarray, spec: StencilSpec) -> jnp.ndarray:
+    """Raw 3D stencil, zero padding.  x: (batch, Z, X, Y)."""
+    return jnp.stack([apply_stencil(x[i], spec) for i in range(x.shape[0])])
+
+
+def jacobi2d_ref(
+    x: jnp.ndarray, spec: StencilSpec, bc_value: float, iterations: int
+) -> jnp.ndarray:
+    """Jacobi with scalar Dirichlet BC.  x: (batch, H, W)."""
+    bc = DirichletBC(bc_value)
+    out = []
+    for i in range(x.shape[0]):
+        g = bc.set_boundary(x[i])
+        for _ in range(iterations):
+            g = bc.apply_mask_trick(apply_stencil(g, spec))
+        out.append(g)
+    return jnp.stack(out)
+
+
+def dense_stencil_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (S, N) @ w: (N, N) with fp32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,108 @@
+"""Direct 3D stencil Pallas kernel (7-point and general radius-r).
+
+The paper could not express 3D natively (no Conv3D on the CS-1) and paid a
+Z²-banded channel matrix instead (Figures 3-4).  On TPU we tile the X
+dimension into VMEM blocks with halo (``pl.Element``); Z and Y stay whole in
+the block (Z is small in the paper's workloads — Z=10 — and Y rides the
+128-lane dim).  Z-shifts are in-block with zero fill via concatenation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.stencil import StencilSpec
+from repro.kernels.stencil2d import _round_up
+
+
+def _shift3d(xb: jnp.ndarray, dz: int, dx: int, dy: int, r: int) -> jnp.ndarray:
+    """result[z,i,j] = xb_padded[z+dz, r+i+dx, r+j+dy], zero-filled in Z."""
+    Z, h, w = xb.shape
+    if dz > 0:
+        xz = jnp.concatenate([xb[dz:], jnp.zeros((dz, h, w), xb.dtype)], axis=0)
+    elif dz < 0:
+        xz = jnp.concatenate([jnp.zeros((-dz, h, w), xb.dtype), xb[:dz]], axis=0)
+    else:
+        xz = xb
+    return jax.lax.slice(xz, (0, r + dx, r + dy), (Z, h - r + dx, w - r + dy))
+
+
+def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, block_x: int,
+            Z: int, X: int, Y: int, bc_value: float | None):
+    i = pl.program_id(1)
+    xb = x_ref[0].astype(jnp.float32)  # (Z, block_x + 2r, Yp + 2r)
+    _, bx2, by2 = xb.shape
+    zs = jax.lax.broadcasted_iota(jnp.int32, xb.shape, 0)
+    xs = i * block_x - r + jax.lax.broadcasted_iota(jnp.int32, xb.shape, 1)
+    ys = -r + jax.lax.broadcasted_iota(jnp.int32, xb.shape, 2)
+    in_array = (xs >= 0) & (xs < X) & (ys >= 0) & (ys < Y)
+    xb = jnp.where(in_array, xb, 0.0)
+
+    acc = None
+    for off, wgt in spec.taps:
+        term = _shift3d(xb, off[0], off[1], off[2], r) * np.float32(wgt)
+        acc = term if acc is None else acc + term
+
+    if bc_value is not None:
+        ozs = zs[:, r:-r, r:-r] if r else zs
+        oxs = xs[:, r:-r, r:-r] if r else xs
+        oys = ys[:, r:-r, r:-r] if r else ys
+        interior = (
+            (ozs >= 1) & (ozs < Z - 1)
+            & (oxs >= 1) & (oxs < X - 1)
+            & (oys >= 1) & (oys < Y - 1)
+        )
+        acc = jnp.where(interior, acc, np.float32(bc_value))
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "block_x", "bc_value", "interpret"),
+)
+def stencil3d(
+    x: jnp.ndarray,
+    spec: StencilSpec,
+    *,
+    block_x: int = 64,
+    bc_value: float | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """One 3D stencil step.  x: (batch, Z, X, Y).
+
+    bc_value=None → raw zero-padded stencil (matches stencil3d_ref);
+    bc_value=v    → fused Jacobi step with scalar Dirichlet BC.
+    """
+    if spec.ndim != 3:
+        raise ValueError("stencil3d needs a 3D spec")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, Z, X, Y = x.shape
+    r = spec.radius
+    bx = min(block_x, _round_up(X, 8))
+    Xp = _round_up(X, bx)
+    Yp = _round_up(Y, 128)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, Xp - X), (0, Yp - Y)))
+
+    kern = functools.partial(
+        _kernel, spec=spec, r=r, block_x=bx, Z=Z, X=X, Y=Y, bc_value=bc_value
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Xp // bx),
+        in_specs=[
+            pl.BlockSpec(
+                (1, Z, pl.Element(bx + 2 * r, padding=(r, r)),
+                 pl.Element(Yp + 2 * r, padding=(r, r))),
+                lambda b, i: (b, 0, i * bx, 0),
+            )
+        ],
+        out_specs=pl.BlockSpec((1, Z, bx, Yp), lambda b, i: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Z, Xp, Yp), x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:, :, :X, :Y]

@@ -1,0 +1,86 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_EXTRA", "") + " --xla_force_host_platform_device_count=512"
+
+"""Pipeline-parallel dry-run proof (optional parallelism mode, DESIGN §5).
+
+Lowers + compiles a GPipe-pipelined qwen3-0.6b train forward+loss on the
+multi-pod mesh with the 2 pipeline stages riding the *pod* axis (inter-pod
+links carry only microbatch activations — the traffic pattern PP exists
+for), batch sharded over the data axis inside each stage.
+"""
+import json
+import sys
+import time
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model_zoo import build
+    from repro.models.transformer import dense_block
+    from repro.parallel.pipeline import gpipe, split_stages
+    from repro.launch.hlo_cost import analyze
+
+    cfg = get_config("qwen3-0.6b")
+    api = build(cfg)
+    mesh = make_production_mesh(multi_pod=True)
+    S = mesh.shape["pod"]
+    B, L = 256, 4096
+    M = 8  # microbatches
+
+    def stage_fn(stage_params, x):
+        pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), x.shape[:2])
+        def body(x, lp):
+            y, _, _ = dense_block(cfg, lp, x, positions=pos, sharder=None,
+                                  mode="train")
+            return y, None
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, stage_params)
+        return x
+
+    pipe = gpipe(stage_fn, mesh, "pod", n_microbatches=M)
+
+    def step(layers_staged, embed, x_tokens):
+        x = jnp.take(embed, x_tokens, axis=0).astype(jnp.bfloat16)
+        out = pipe(layers_staged, x)
+        return jnp.mean(out.astype(jnp.float32) ** 2)
+
+    shapes = api.shapes(jnp.bfloat16)
+    staged = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((S, s.shape[0] // S, *s.shape[1:]), s.dtype),
+        shapes["layers"])
+    embed = shapes["embed"]
+    tokens = jax.ShapeDtypeStruct((B, L), jnp.int32)
+
+    in_sh = (
+        jax.tree.map(lambda s: NamedSharding(mesh, P("pod")), staged),
+        NamedSharding(mesh, P()),
+        NamedSharding(mesh, P(None, None)),
+    )
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(step, in_shardings=in_sh).lower(
+            staged, embed, tokens).compile()
+    rec = {
+        "mode": "pipeline(pod=2 stages) x data(16)",
+        "arch": "qwen3-0.6b", "batch": B, "seq": L, "microbatches": M,
+        "compile_s": round(time.time() - t0, 1),
+        "memory_analysis": {
+            "temp_bytes": int(compiled.memory_analysis().temp_size_in_bytes),
+        },
+        "hlo_cost": analyze(compiled.as_text()),
+        "status": "OK",
+    }
+    os.makedirs("artifacts/dryrun", exist_ok=True)
+    with open("artifacts/dryrun/pipeline__train_4k__pod2x16x16.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    cp = rec["hlo_cost"]["collectives"]["collective-permute"]
+    print(f"[dryrun_pp] OK compile={rec['compile_s']}s "
+          f"permute_count={cp['count']} permute_bytes={cp['operand_bytes']:.3e}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function, not a module constant: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests, examples)."""
+    n = len(jax.devices())
+    if n % model:
+        model = 1
+    return jax.make_mesh((n // model, model), ("data", "model"))

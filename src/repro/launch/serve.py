@@ -1,0 +1,71 @@
+"""Serving launcher: batched prefill + greedy decode with the sharded cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \\
+      --batch 4 --prompt-len 32 --tokens 16
+
+On this CPU container use --smoke; the full configs are exercised by the
+decode_*/prefill_* dry-run cells.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model_zoo import build
+    from repro.parallel.sharding import Sharder
+    from repro.train.serve_step import make_decode_step, make_prefill_step
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    api = build(cfg)
+    mesh = make_host_mesh()
+    sharder = Sharder(mesh=mesh, profile=cfg.sharding_profile)
+    params = api.init(jax.random.PRNGKey(0), jnp.bfloat16)
+    rng = np.random.default_rng(0)
+    B, S = args.batch, args.prompt_len
+    max_len = S + args.tokens + 1
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))}
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jnp.zeros((B, cfg.enc_len, cfg.d_model),
+                                        jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.zeros(
+            (B, min(cfg.n_vision_tokens, S), cfg.d_model), jnp.bfloat16)
+
+    with mesh:
+        prefill = jax.jit(make_prefill_step(api, sharder, max_len))
+        t0 = time.perf_counter()
+        token, cache = jax.block_until_ready(prefill(params, batch))
+        t_pre = time.perf_counter() - t0
+        print(f"prefill {B}x{S}: {t_pre*1e3:.0f} ms ({B*S/t_pre:.0f} tok/s)")
+
+        out = [token]
+        t0 = time.perf_counter()
+        for i in range(args.tokens):
+            step = jax.jit(make_decode_step(api, sharder, S + i))
+            token, cache = step(params, token, cache)
+            out.append(token)
+        jax.block_until_ready(token)
+        dt = (time.perf_counter() - t0) / args.tokens
+    print(f"decode: {dt*1e3:.1f} ms/token (incl per-position compile)")
+    print("seq0:", [int(t[0]) for t in out])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,166 @@
+"""Input ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+Nothing here allocates: inputs are ShapeDtypeStructs and parameter/optimizer
+trees come from the declarative tables via param_shapes (eval-shape style).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_config
+from repro.models.model_zoo import ModelApi, build
+from repro.parallel.sharding import Sharder
+
+# The assigned LM shape set (seq_len, global_batch, kind).
+SHAPES: dict[str, dict] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+# long_500k needs a sub-quadratic path: run only for SSM/hybrid archs
+# (attention-free state or periodic attention); skip for pure full-attention
+# archs per the assignment (recorded as SKIP rows in the roofline table).
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_is_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.family not in LONG_CONTEXT_FAMILIES:
+        return False, (
+            f"{cfg.family} is full-attention; 500k-token decode has no "
+            "sub-quadratic path (DESIGN §4)"
+        )
+    return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape_name: str
+    cfg: ModelConfig
+    api: ModelApi
+    kind: str
+    seq: int
+    batch: int
+
+
+def make_cell(arch: str, shape_name: str, smoke: bool = False) -> Cell:
+    cfg = get_config(arch, smoke=smoke)
+    sh = SHAPES[shape_name]
+    return Cell(arch=arch, shape_name=shape_name, cfg=cfg, api=build(cfg),
+                kind=sh["kind"], seq=sh["seq"], batch=sh["batch"])
+
+
+def make_sharder(cell: Cell, mesh) -> Sharder:
+    data_ways = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    return Sharder(
+        mesh=mesh,
+        profile=cell.cfg.sharding_profile,
+        state_over_data=cell.batch < data_ways,
+    )
+
+
+def _batch_specs(cell: Cell, dtype=jnp.bfloat16) -> dict:
+    cfg, B, S = cell.cfg, cell.batch, cell.seq
+    batch: dict = {
+        "tokens": (jax.ShapeDtypeStruct((B, S), jnp.int32), ("batch", "seq")),
+    }
+    if cell.kind == "train":
+        batch["labels"] = (jax.ShapeDtypeStruct((B, S), jnp.int32), ("batch", "seq"))
+    if cfg.family == "encdec":
+        batch["enc_frames"] = (
+            jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.d_model), dtype),
+            ("batch", "enc_seq", "embed"),
+        )
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = (
+            jax.ShapeDtypeStruct((B, cfg.n_vision_tokens, cfg.d_model), dtype),
+            ("batch", "patches", "embed"),
+        )
+        batch["positions"] = (
+            jax.ShapeDtypeStruct((3, B, S), jnp.int32), (None, "batch", "seq"),
+        )
+    return batch
+
+
+def split_specs(tagged) -> tuple[dict, dict]:
+    """Split {name: (struct, dims)} into (structs, dims)."""
+    structs = {k: v[0] for k, v in tagged.items()}
+    dims = {k: v[1] for k, v in tagged.items()}
+    return structs, dims
+
+
+def input_specs(cell: Cell, dtype=jnp.bfloat16):
+    """Returns (args_structs, args_dims) pytrees for the cell's step fn.
+
+    train  : (state, batch)
+    prefill: (params, batch)
+    decode : (params, token, cache)
+    """
+    from repro.train.train_step import state_dims, state_shapes
+
+    if cell.kind == "train":
+        batch_structs, batch_dims = split_specs(_batch_specs(cell, dtype))
+        return ((state_shapes(cell.api), batch_structs),
+                (state_dims(cell.api), batch_dims))
+
+    params_structs = cell.api.shapes(dtype)
+    params_dims = cell.api.dims()
+
+    if cell.kind == "prefill":
+        batch_structs, batch_dims = split_specs(_batch_specs(cell, dtype))
+        return ((params_structs, batch_structs), (params_dims, batch_dims))
+
+    # decode: one token against a cache of size seq (filled to seq-1)
+    token = jax.ShapeDtypeStruct((cell.batch,), jnp.int32)
+    cache_structs = cell.api.cache_shapes(cell.batch, cell.seq, dtype)
+    cache_dims = cell.api.cache_dims()
+    return ((params_structs, token, cache_structs),
+            (params_dims, ("batch",), cache_dims))
+
+
+def input_shardings(cell: Cell, sharder: Sharder, structs, dims):
+    """NamedShardings for the cell's step args.
+
+    Train-state tensors (fp32 master params, AdamW m/v) get the ZeRO-1 spec
+    (additionally sharded over the data axes); everything else follows the
+    logical-dims rules.
+    """
+    import jax
+    from repro.parallel.sharding import tree_shardings
+
+    shapes = jax.tree.map(lambda s: s.shape, structs,
+                          is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    if cell.kind != "train":
+        return tree_shardings(sharder, dims, shapes)
+
+    state_shapes_, batch_shapes = shapes
+    state_dims_, batch_dims = dims
+
+    def is_dims(x):
+        return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+    zero1 = {
+        k: jax.tree.map(lambda d, s: sharder.opt_sharding(tuple(d), tuple(s)),
+                        state_dims_[k], state_shapes_[k], is_leaf=is_dims)
+        for k in ("params", "m", "v")
+    }
+    zero1["step"] = sharder.sharding((), ())
+    batch_sh = tree_shardings(sharder, batch_dims, batch_shapes)
+    return (zero1, batch_sh)
+
+
+def make_step_fn(cell: Cell, sharder: Sharder | None):
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.serve_step import make_decode_step, make_prefill_step
+    from repro.train.train_step import make_train_step
+
+    if cell.kind == "train":
+        return make_train_step(cell.api, sharder, AdamWConfig())
+    if cell.kind == "prefill":
+        return make_prefill_step(cell.api, sharder, max_len=cell.seq)
+    return make_decode_step(cell.api, sharder, kv_len=cell.seq - 1)

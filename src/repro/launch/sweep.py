@@ -1,0 +1,68 @@
+"""Run the full dry-run sweep: every (arch × shape × mesh) cell as an
+isolated subprocess (fresh XLA state per cell), resumable — existing JSON
+artifacts are skipped.
+
+  PYTHONPATH=src python -m repro.launch.sweep [--mesh pod multipod] [--jobs 1]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "qwen3-0.6b", "mamba2-370m", "whisper-tiny", "zamba2-1.2b",
+    "qwen2-vl-2b", "glm4-9b", "phi3-medium-14b", "nemotron-4-15b",
+    "moonshot-v1-16b-a3b", "qwen3-moe-30b-a3b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", nargs="+", default=["pod", "multipod"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--archs", nargs="+", default=ARCHS)
+    ap.add_argument("--shapes", nargs="+", default=SHAPES)
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = [(a, s, m) for m in args.mesh for s in args.shapes
+             for a in args.archs]
+    done = fail = 0
+    t0 = time.time()
+    for arch, shape, mesh in cells:
+        mesh_name = "pod2x16x16" if mesh == "multipod" else "pod16x16"
+        path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+        if os.path.exists(path):
+            done += 1
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--out", args.out]
+        print(f"[sweep] ({done+fail+1}/{len(cells)}) {arch} x {shape} x {mesh}",
+              flush=True)
+        try:
+            r = subprocess.run(cmd, timeout=args.timeout,
+                               capture_output=True, text=True)
+            if r.returncode != 0:
+                fail += 1
+                with open(path + ".err", "w") as f:
+                    f.write(r.stdout[-4000:] + "\n---\n" + r.stderr[-8000:])
+                print(f"[sweep]   FAILED (see {path}.err)", flush=True)
+            else:
+                done += 1
+        except subprocess.TimeoutExpired:
+            fail += 1
+            with open(path + ".err", "w") as f:
+                f.write("TIMEOUT")
+            print("[sweep]   TIMEOUT", flush=True)
+    print(f"[sweep] finished: {done} ok, {fail} failed, "
+          f"{time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

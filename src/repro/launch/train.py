@@ -1,0 +1,99 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen3-0.6b --smoke ...``
+
+Builds the mesh, sharded train step, synthetic data pipeline, and drives the
+fault-tolerant runtime.  On this CPU container use --smoke (reduced config);
+the full configs are exercised via the dry-run.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default="artifacts/ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    ap.add_argument("--fail-at-step", type=int, default=None)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs import get_config
+    from repro.data.synthetic import DataConfig, token_batch
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model_zoo import build
+    from repro.optim.adamw import AdamWConfig
+    from repro.parallel.sharding import Sharder, tree_shardings
+    from repro.runtime.ft import FTConfig, run_training
+    from repro.train.train_step import (
+        init_train_state, make_train_step, state_dims,
+    )
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    api = build(cfg)
+    mesh = make_host_mesh()
+    sharder = Sharder(mesh=mesh, profile=cfg.sharding_profile)
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(1, args.steps // 10))
+    step_fn = make_train_step(api, sharder, opt)
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                          global_batch=args.global_batch)
+
+    def batch_for_step(step):
+        b = token_batch(data_cfg, step)
+        extra = {}
+        if cfg.family == "encdec":
+            import jax.numpy as jnp
+            extra["enc_frames"] = jnp.zeros(
+                (args.global_batch, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            import jax.numpy as jnp
+            extra["vision_embeds"] = jnp.zeros(
+                (args.global_batch, min(cfg.n_vision_tokens, args.seq_len),
+                 cfg.d_model), jnp.bfloat16)
+        return {**b, **extra}
+
+    def init_state():
+        return init_train_state(api, jax.random.PRNGKey(0))
+
+    sdims = state_dims(api)
+    import jax.numpy as jnp
+    from repro.train.train_step import state_shapes
+    sshapes = jax.tree.map(lambda s: s.shape, state_shapes(api),
+                           is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    shardings = tree_shardings(sharder, sdims, sshapes)
+
+    ft = FTConfig(checkpoint_dir=args.checkpoint_dir,
+                  checkpoint_every=args.checkpoint_every,
+                  fail_at_step=args.fail_at_step)
+
+    def on_step(st):
+        if st.step % args.log_every == 0:
+            flag = " STRAGGLER" if st.is_straggler else ""
+            print(f"step {st.step:5d} loss={st.metrics['loss']:.4f} "
+                  f"nll={st.metrics['nll']:.4f} lr={st.metrics['lr']:.2e} "
+                  f"gnorm={st.metrics['grad_norm']:.3f} {st.seconds*1e3:.0f}ms"
+                  f"{flag}", flush=True)
+
+    with mesh:
+        jitted = jax.jit(step_fn, in_shardings=(shardings, None),
+                         donate_argnums=(0,))
+        state, stats = run_training(
+            jitted, init_state, batch_for_step, args.steps, ft,
+            state_shardings=shardings, on_step=on_step)
+    losses = [s.metrics["loss"] for s in stats]
+    if losses:
+        print(f"done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

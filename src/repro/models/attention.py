@@ -1,0 +1,139 @@
+"""GQA attention: q-chunked flash-style softmax (train/prefill) + cached decode.
+
+Two layouts, chosen by the sharding profile:
+
+  * tp (shard_heads=True) — K/V are broadcast from KV to H heads *after* a
+    sharding constraint on H, so the per-device score block is
+    (B, H/tp, chunk, S): the broadcast is free post-partitioning (each
+    device materializes only its head slice) and scores shard over the
+    model axis.  GQA grouped einsums would instead leave scores replicated
+    whenever KV < tp (e.g. 8 KV heads on a 16-wide axis) — that cost
+    22.8 GB/device on the first dry-run of qwen3-0.6b (EXPERIMENTS §Perf).
+  * sp/unsharded (shard_heads=False) — grouped einsum, no KV broadcast; the
+    q sequence dim carries the sharding instead.
+
+Scores never materialize at (S, S): a lax.scan over query chunks keeps the
+live buffer at (B, H, chunk, S) fp32 and the rematted chunk body makes the
+backward recompute probabilities per chunk.
+
+Decode attends one query token against a sequence-sharded KV cache; the
+softmax reduction over the sharded seq dim makes XLA SPMD emit the
+flash-decoding combine (partial max/sum + small all-reduces) automatically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MASK_VALUE = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, H: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, H, hd) broadcasting each KV head to its group."""
+    B, S, KV, hd = k.shape
+    G = H // KV
+    return jnp.broadcast_to(k[:, :, :, None], (B, S, KV, G, hd)).reshape(B, S, H, hd)
+
+
+def _chunk_attn_full(q, k, v, q_pos0, kv_pos, causal, scale):
+    """q: (B,C,H,hd); k/v: (B,S,H,hd) (already head-broadcast)."""
+    C = q.shape[1]
+    scores = jnp.einsum("bchd,bshd->bhcs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qp = q_pos0 + jnp.arange(C)[:, None]
+        mask = kv_pos[None, :] <= qp
+        scores = jnp.where(mask[None, None], scores, MASK_VALUE)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhcs,bshd->bchd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def _chunk_attn_grouped(q, k, v, q_pos0, kv_pos, causal, scale):
+    """q: (B,C,KV,G,hd); k/v: (B,S,KV,hd) (no broadcast materialized)."""
+    C = q.shape[1]
+    scores = jnp.einsum("bckgh,bskh->bkgcs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qp = q_pos0 + jnp.arange(C)[:, None]
+        mask = kv_pos[None, :] <= qp
+        scores = jnp.where(mask[None, None, None], scores, MASK_VALUE)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgcs,bskh->bckgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_offset: int = 0,
+    shard_heads: bool = False,
+) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    scale = hd ** -0.5
+    kv_pos = jnp.arange(k.shape[1]) + kv_offset
+
+    if shard_heads:
+        k = _repeat_kv(k, H)
+        v = _repeat_kv(v, H)
+        qx = q
+        chunk_fn = _chunk_attn_full
+    else:
+        qx = q.reshape(B, Sq, KV, H // KV, hd)
+        chunk_fn = _chunk_attn_grouped
+
+    if Sq % q_chunk:
+        q_chunk = next(c for c in range(min(q_chunk, Sq), 0, -1) if Sq % c == 0)
+    n_chunks = Sq // q_chunk
+
+    if n_chunks == 1:
+        out = chunk_fn(qx, k, v, 0, kv_pos, causal, scale)
+        return out.reshape(B, Sq, H, hd)
+
+    qc = qx.reshape(B, n_chunks, q_chunk, *qx.shape[2:])
+
+    body = jax.checkpoint(
+        lambda carry, inp: (
+            carry,
+            chunk_fn(inp[0], k, v, inp[1], kv_pos, causal, scale),
+        )
+    )
+    xs = (jnp.moveaxis(qc, 1, 0), jnp.arange(n_chunks) * q_chunk)
+    _, out = jax.lax.scan(body, 0, xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
+    return out
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    kv_len: jnp.ndarray | int,
+) -> jnp.ndarray:
+    """Single-step decode.  q: (B, 1, H, hd); caches: (B, S_max, KV, hd).
+
+    Grouped einsum (no KV broadcast: decode is cache-bandwidth-bound).
+    kv_len masks the valid prefix (cache slots >= kv_len are ignored).
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    pos = jnp.arange(k_cache.shape[1])
+    scores = jnp.where(pos[None, None, None, :] < kv_len, scores, MASK_VALUE)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskh->bkgh", probs.astype(v_cache.dtype), v_cache,
+    ).astype(q.dtype)
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,217 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment the conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, enc_len, D); the stencil-engine conv stem
+exists in core/ but is not on this path (DESIGN §4).  Encoder: bidirectional
+attention blocks.  Decoder: causal self-attention + cross-attention + GELU
+MLP.  LayerNorm, learned decoder positions, sinusoid encoder positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import decode_attention
+from repro.models.layers import ParamDef, layer_norm, stack_tables
+from repro.models.mlp import mlp_apply, mlp_table
+from repro.models.transformer import (
+    attn_apply,
+    attn_cache_shapes,
+    attn_table,
+    _stack_shapes,
+)
+
+
+def _ln(d):
+    return {"w": ParamDef((d,), ("embed",), scale="one"),
+            "b": ParamDef((d,), ("embed",), scale="zero")}
+
+
+def enc_block_table(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": _ln(cfg.d_model),
+        "attn": attn_table(cfg),
+        "ln2": _ln(cfg.d_model),
+        "mlp": mlp_table(cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def dec_block_table(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": _ln(cfg.d_model),
+        "self_attn": attn_table(cfg),
+        "ln2": _ln(cfg.d_model),
+        "cross_attn": attn_table(cfg),
+        "ln3": _ln(cfg.d_model),
+        "mlp": mlp_table(cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def encdec_table(cfg: ModelConfig, max_dec_positions: int = 32768) -> dict:
+    D, V = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), scale=1.0),
+        "dec_pos": ParamDef((max_dec_positions, D), (None, "embed"), scale=0.02),
+        "enc_layers": stack_tables(enc_block_table(cfg), cfg.n_enc_layers),
+        "dec_layers": stack_tables(dec_block_table(cfg), cfg.n_layers),
+        "enc_ln": _ln(D),
+        "dec_ln": _ln(D),
+        "lm_head": ParamDef((V, D), ("vocab", "embed")),
+    }
+
+
+def _sinusoid(length: int, d: int) -> np.ndarray:
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    inv = np.exp(-np.log(10000.0) * dim / max(1, d // 2 - 1))
+    ang = pos * inv
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+def encode(cfg: ModelConfig, params, frames, *, sharder=None, remat=True):
+    """frames: (B, enc_len, D) stub embeddings -> (B, enc_len, D)."""
+    B, T, D = frames.shape
+    x = frames + jnp.asarray(_sinusoid(T, D), frames.dtype)[None]
+    if sharder is not None:
+        x = sharder.constrain(x, ("batch", "enc_seq", "embed"))
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        a, _ = attn_apply(cfg, lp["attn"], h, positions=None, sharder=None,
+                          causal=False, use_rope=False)
+        x = x + a
+        h = layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        return x, None
+
+    f = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(f, x, params["enc_layers"])
+    return layer_norm(x, params["enc_ln"]["w"], params["enc_ln"]["b"], cfg.norm_eps)
+
+
+def _dec_block(cfg, lp, x, enc_out, positions, sharder, mode,
+               cache=None, kv_len=0):
+    h = layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+    if mode == "decode":
+        from repro.models.transformer import attn_decode_apply
+        a, self_cache = attn_decode_apply(cfg, lp["self_attn"], h, cache["self"],
+                                          kv_len, positions=None, sharder=sharder)
+    else:
+        a, kv = attn_apply(cfg, lp["self_attn"], h, positions=None,
+                           sharder=sharder, causal=True, use_rope=False)
+        self_cache = {"k": kv[0], "v": kv[1]} if mode == "prefill" else None
+    x = x + a
+
+    h = layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+    if mode == "decode":
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"],
+                       preferred_element_type=jnp.float32).astype(h.dtype)
+        out = decode_attention(q, cache["cross_k"], cache["cross_v"],
+                               cache["cross_k"].shape[1])
+        a = jnp.einsum("bshk,hkd->bsd", out, lp["cross_attn"]["wo"],
+                       preferred_element_type=jnp.float32).astype(h.dtype)
+        cross_k, cross_v = cache["cross_k"], cache["cross_v"]
+    else:
+        a, crosskv = attn_apply(cfg, lp["cross_attn"], h, positions=None,
+                                sharder=sharder, causal=False,
+                                kv_source=enc_out, use_rope=False)
+        cross_k, cross_v = crosskv
+    x = x + a
+
+    h = layer_norm(x, lp["ln3"]["w"], lp["ln3"]["b"], cfg.norm_eps)
+    x = x + mlp_apply(lp["mlp"], h, "gelu")
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"self": self_cache, "cross_k": cross_k, "cross_v": cross_v}
+    return x, new_cache
+
+
+def decode_train(cfg: ModelConfig, params, tokens, enc_out, *, sharder=None,
+                 remat=True):
+    """Teacher-forced decoder pass -> final hidden (B, S, D)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + params["dec_pos"][:S][None].astype(x.dtype)
+    if sharder is not None:
+        x = sharder.constrain(x, ("batch", "seq", "embed"))
+
+    def body(x, lp):
+        x, _ = _dec_block(cfg, lp, x, enc_out, None, sharder, "train")
+        return x, None
+
+    f = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(f, x, params["dec_layers"])
+    return layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"], cfg.norm_eps)
+
+
+def encdec_cache_shapes(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    per = {
+        "self": attn_cache_shapes(cfg, batch, max_len, dtype),
+        "cross_k": jax.ShapeDtypeStruct(
+            (batch, cfg.enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "cross_v": jax.ShapeDtypeStruct(
+            (batch, cfg.enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+    return _stack_shapes(per, cfg.n_layers)
+
+
+def encdec_cache_dims():
+    return {
+        "self": {"k": (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+                 "v": (None, "batch", "kv_seq", "kv_heads", "head_dim")},
+        "cross_k": (None, "batch", "enc_seq", "kv_heads", "head_dim"),
+        "cross_v": (None, "batch", "enc_seq", "kv_heads", "head_dim"),
+    }
+
+
+def encdec_prefill(cfg: ModelConfig, params, tokens, enc_frames, max_len, *,
+                   sharder=None):
+    """Encode + teacher-forced decoder prefill -> (last hidden, cache)."""
+    enc_out = encode(cfg, params, enc_frames, sharder=sharder)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + params["dec_pos"][:S][None].astype(x.dtype)
+    if sharder is not None:
+        x = sharder.constrain(x, ("batch", "seq", "embed"))
+
+    def pad_self(kv):
+        pad = [(0, 0), (0, max_len - kv["k"].shape[1]), (0, 0), (0, 0)]
+        out = {"k": jnp.pad(kv["k"], pad), "v": jnp.pad(kv["v"], pad)}
+        if sharder is not None:
+            out = {n: sharder.constrain(t, ("batch", "kv_seq", None, None))
+                   for n, t in out.items()}
+        return out
+
+    def body(x, lp):
+        x, c = _dec_block(cfg, lp, x, enc_out, None, sharder, "prefill")
+        c["self"] = pad_self(c["self"])
+        return x, c
+
+    x, caches = jax.lax.scan(jax.checkpoint(body), x, params["dec_layers"])
+    x = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"], cfg.norm_eps)
+    return x[:, -1], caches
+
+
+def encdec_decode_step(cfg: ModelConfig, params, token, cache, kv_len, *,
+                       sharder=None):
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], kv_len, 1, 0)[None].astype(x.dtype)
+    if sharder is not None:
+        x = sharder.constrain(x, ("batch", None, "embed"))
+
+    def body(x, inp):
+        lp, c = inp
+        x, nc = _dec_block(cfg, lp, x, None, None, sharder, "decode",
+                           cache=c, kv_len=kv_len)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    x = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    from repro.models.transformer import mask_pad_logits
+    logits = mask_pad_logits(logits, cfg)
+    return logits[:, 0], new_cache

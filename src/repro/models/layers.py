@@ -1,0 +1,160 @@
+"""Shared model-layer primitives + declarative parameter tables.
+
+Parameters are declared once as ``ParamDef(shape, dims, scale)`` tables; the
+same table yields (a) initialized arrays, (b) ShapeDtypeStructs for the
+dry-run (no allocation), and (c) the logical-dims tree the Sharder consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    dims: tuple[str | None, ...]
+    scale: float | str = "fan_in"   # float -> normal(scale); "fan_in"; "zero"; "one"
+    dtype: Any = None               # None -> model dtype
+
+    def init(self, key, dtype):
+        dt = self.dtype or dtype
+        if self.scale == "zero":
+            return jnp.zeros(self.shape, dt)
+        if self.scale == "one":
+            return jnp.ones(self.shape, dt)
+        if self.scale == "fan_in":
+            s = 1.0 / math.sqrt(max(1, self.shape[0]))
+        else:
+            s = float(self.scale)
+        return (jax.random.normal(key, self.shape, jnp.float32) * s).astype(dt)
+
+
+def init_params(table: Mapping[str, Any], key, dtype):
+    """Materialize a (nested) ParamDef table into arrays."""
+    flat = _flatten(table)
+    keys = jax.random.split(key, len(flat))
+    out = {}
+    for (path, pd), k in zip(flat, keys):
+        _set(out, path, pd.init(k, dtype))
+    return out
+
+
+def param_dims(table: Mapping[str, Any]):
+    out = {}
+    for path, pd in _flatten(table):
+        _set(out, path, pd.dims)
+    return out
+
+
+def param_shapes(table: Mapping[str, Any], dtype):
+    out = {}
+    for path, pd in _flatten(table):
+        out_dt = pd.dtype or dtype
+        _set(out, path, jax.ShapeDtypeStruct(pd.shape, out_dt))
+    return out
+
+
+def stack_tables(table: Mapping[str, Any], n: int, dim_name: str = "layers"):
+    """Prefix every ParamDef with a leading stacked-layers dim (for scan)."""
+    out = {}
+    for path, pd in _flatten(table):
+        _set(out, path, ParamDef((n, *pd.shape), (None, *pd.dims), pd.scale, pd.dtype))
+    return out
+
+
+def _flatten(table, prefix=()):
+    items = []
+    for k, v in table.items():
+        if isinstance(v, ParamDef):
+            items.append(((*prefix, k), v))
+        else:
+            items.extend(_flatten(v, (*prefix, k)))
+    return items
+
+
+def _set(tree, path, value):
+    for p in path[:-1]:
+        tree = tree.setdefault(p, {})
+    tree[path[-1]] = value
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+
+    Rotates pairs (x[..., :d/2], x[..., d/2:]) — the HF 'split-half'
+    convention used by all assigned LM archs.
+    """
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs        # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                              # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float,
+    sections: tuple[int, ...],
+) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL, arXiv:2409.12191).
+
+    positions: (3, batch, seq) — temporal / height / width position ids.
+    The head_dim/2 frequency slots are partitioned into ``sections`` (summing
+    to hd/2); each section takes its angle from the corresponding position
+    channel.  For pure-text tokens all three channels are equal, reducing to
+    standard RoPE.
+    """
+    hd = x.shape[-1]
+    if sum(sections) != hd // 2:
+        raise ValueError(f"mrope sections {sections} must sum to {hd // 2}")
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)          # (hd/2,)
+    # angles per channel: (3, B, S, hd/2); section i reads channel i.
+    angles_all = positions[..., None].astype(jnp.float32) * freqs
+    parts, start = [], 0
+    for i, s in enumerate(sections):
+        parts.append(angles_all[i, ..., start : start + s])
+        start += s
+    angles = jnp.concatenate(parts, axis=-1)                         # (B, S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # squared ReLU (Primer / nemotron)
+}

@@ -1,0 +1,33 @@
+"""Dense FFN variants: gated (SwiGLU/GeGLU) and ungated (squared-ReLU, GELU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import ACTIVATIONS, ParamDef
+
+
+def mlp_table(d_model: int, d_ff: int, gated: bool) -> dict:
+    t = {
+        "up": ParamDef((d_model, d_ff), ("embed", "dff")),
+        "down": ParamDef((d_ff, d_model), ("dff", "embed")),
+    }
+    if gated:
+        t["gate"] = ParamDef((d_model, d_ff), ("embed", "dff"))
+    return t
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, activation: str, sharder=None) -> jnp.ndarray:
+    act = ACTIVATIONS[activation]
+    # bf16 outputs: fp32 dot outputs double HBM traffic and drag fp32 into
+    # the backward collectives (§Perf B iteration 3)
+    up = jnp.einsum("...d,df->...f", x, params["up"])
+    if "gate" in params:
+        gate = jnp.einsum("...d,df->...f", x, params["gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = h.astype(x.dtype)
+    if sharder is not None:
+        h = sharder.constrain(h, (*("batch", "seq")[: x.ndim - 1], "dff"))
+    out = jnp.einsum("...f,fd->...d", h, params["down"])
+    return out.astype(x.dtype)

@@ -1,0 +1,97 @@
+"""Family-dispatched model API: one namespace the train/serve/launch layers use.
+
+  build(cfg)          -> ModelApi with init/shapes/dims/forward/prefill/decode
+  All functions are functional (params in, arrays out) for pjit friendliness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as _encdec
+from repro.models import transformer as _tf
+from repro.models.layers import init_params, param_dims, param_shapes
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    table: dict
+    init: Callable[..., Any]
+    shapes: Callable[..., Any]
+    dims: Callable[[], Any]
+    forward: Callable[..., Any]          # train-mode: -> (hidden, aux)
+    prefill: Callable[..., Any]          # -> (last hidden/logits, cache)
+    decode_step: Callable[..., Any]      # -> (logits, cache)
+    cache_shapes: Callable[..., Any]
+    cache_dims: Callable[[], Any]
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "encdec":
+        table = _encdec.encdec_table(cfg)
+
+        def forward(params, batch, sharder=None):
+            enc_out = _encdec.encode(cfg, params, batch["enc_frames"],
+                                     sharder=sharder)
+            hidden = _encdec.decode_train(cfg, params, batch["tokens"], enc_out,
+                                          sharder=sharder)
+            return hidden, jnp.zeros((), jnp.float32)
+
+        def prefill(params, batch, max_len, sharder=None):
+            return _encdec.encdec_prefill(cfg, params, batch["tokens"],
+                                          batch["enc_frames"], max_len,
+                                          sharder=sharder)
+
+        def decode_step(params, token, cache, kv_len, sharder=None):
+            return _encdec.encdec_decode_step(cfg, params, token, cache, kv_len,
+                                              sharder=sharder)
+
+        def cache_shapes(batch, max_len, dtype=jnp.bfloat16):
+            return _encdec.encdec_cache_shapes(cfg, batch, max_len, dtype)
+
+        cache_dims = _encdec.encdec_cache_dims
+    else:
+        table = _tf.model_table(cfg)
+
+        def forward(params, batch, sharder=None):
+            return _tf.forward(
+                cfg, params, batch["tokens"],
+                positions=batch.get("positions"),
+                vision_embeds=batch.get("vision_embeds"),
+                sharder=sharder,
+            )
+
+        def prefill(params, batch, max_len, sharder=None):
+            return _tf.prefill(
+                cfg, params, batch["tokens"], max_len,
+                positions=batch.get("positions"),
+                vision_embeds=batch.get("vision_embeds"),
+                sharder=sharder,
+            )
+
+        def decode_step(params, token, cache, kv_len, sharder=None):
+            return _tf.decode_step(cfg, params, token, cache, kv_len,
+                                   sharder=sharder)
+
+        def cache_shapes(batch, max_len, dtype=jnp.bfloat16):
+            return _tf.cache_shapes(cfg, batch, max_len, dtype)
+
+        def cache_dims():
+            return _tf.cache_dims(cfg)
+
+    return ModelApi(
+        cfg=cfg,
+        table=table,
+        init=lambda key, dtype=jnp.bfloat16: init_params(table, key, dtype),
+        shapes=lambda dtype=jnp.bfloat16: param_shapes(table, dtype),
+        dims=lambda: param_dims(table),
+        forward=forward,
+        prefill=prefill,
+        decode_step=decode_step,
+        cache_shapes=cache_shapes,
+        cache_dims=cache_dims,
+    )

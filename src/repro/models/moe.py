@@ -1,0 +1,170 @@
+"""Mixture-of-Experts FFN — GShard-style einsum dispatch with capacity,
+group-scanned to bound live memory, experts sharded over the model axis (EP).
+
+Dispatch: tokens are processed in groups of ``group_size``; a lax.scan over
+groups keeps only one group's (S, E, C) one-hot tensors live at a time
+(classic GShard materializes all groups at once — at 32k tokens × 128
+experts that is GBs per device; the scan brings it to ~tens of MB at equal
+FLOPs).  Within a group: top-k router, per-expert position by cumsum,
+tokens beyond capacity dropped (cf=1.25), combine weighted by router prob.
+
+The dispatch einsum contracts tokens(data-sharded) against experts
+(model-sharded) — SPMD lowers it to the EP all-to-all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACTIVATIONS, ParamDef
+
+
+def moe_table(d_model: int, n_experts: int, d_ff: int, n_shared: int = 0) -> dict:
+    t = {
+        "router": ParamDef((d_model, n_experts), ("embed", "experts"), dtype=jnp.float32),
+        "up": ParamDef((n_experts, d_model, d_ff), ("experts", "embed", "expert_dff")),
+        "gate": ParamDef((n_experts, d_model, d_ff), ("experts", "embed", "expert_dff")),
+        "down": ParamDef((n_experts, d_ff, d_model), ("experts", "expert_dff", "embed")),
+    }
+    if n_shared:
+        t["shared"] = {
+            "up": ParamDef((d_model, n_shared * d_ff), ("embed", "dff")),
+            "gate": ParamDef((d_model, n_shared * d_ff), ("embed", "dff")),
+            "down": ParamDef((n_shared * d_ff, d_model), ("dff", "embed")),
+        }
+    return t
+
+
+def _group_moe(params, xg, top_k, capacity, activation, sharder,
+               dispatch_mode="einsum"):
+    """One wave of groups.  xg: (G, S, D) -> (G, S, D), plus aux-loss stats.
+
+    G parallel groups (sharded over the batch axes — every device routes its
+    own tokens concurrently); capacity/cumsum are per-group (local, no
+    cross-device cumsum).  The dispatch einsum contracts the group-local
+    token dim against model-sharded experts — the EP all-to-all.
+    """
+    G, S, D = xg.shape
+    E = params["router"].shape[1]
+    act = ACTIVATIONS[activation]
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (G, S, E) fp32
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)          # (G, S, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Position of each (token, slot) within its expert, GShard priority order:
+    # slot-major then token order; tokens past capacity are dropped.
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)    # (G, S, k, E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, top_k * S, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(
+        G, top_k, S, E).transpose(0, 2, 1, 3)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)               # (G, S, k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep
+
+    def expert_ffn(xin):
+        """xin: (E, G, C, D) -> (E, G, C, D)."""
+        if sharder is not None:
+            xin = sharder.constrain(xin, ("experts", None, None, "embed"))
+        up = jnp.einsum("egcd,edf->egcf", xin, params["up"])
+        gate = jnp.einsum("egcd,edf->egcf", xin, params["gate"])
+        h = (act(gate) * up).astype(xin.dtype)
+        eout = jnp.einsum("egcf,efd->egcd", h, params["down"]).astype(xin.dtype)
+        if sharder is not None:
+            eout = sharder.constrain(eout, ("experts", None, None, "embed"))
+        return eout
+
+    if dispatch_mode == "scatter":
+        # Beyond-paper (§Perf B): index-based dispatch — no (G,S,E,C) one-hot
+        # tensors, no dispatch/combine matmul FLOPs.  Each (token, slot)
+        # scatter-adds its activation into its expert slot row and gathers
+        # the expert output back, weighted by the gate.
+        slot = (expert_idx * capacity + pos.astype(jnp.int32))   # (G,S,k)
+        slot = jnp.where(keep, slot, E * capacity)               # drop -> OOB
+        buf = jnp.zeros((G, E * capacity + 1, D), xg.dtype)
+        gsk = slot.reshape(G, S * top_k)
+        xk = jnp.broadcast_to(xg[:, :, None, :], (G, S, top_k, D)
+                              ).reshape(G, S * top_k, D)
+        buf = jax.vmap(lambda b, i, v: b.at[i].add(v))(buf, gsk, xk)
+        xin = buf[:, :-1].reshape(G, E, capacity, D).transpose(1, 0, 2, 3)
+        eout = expert_ffn(xin)                                   # (E,G,C,D)
+        flat = eout.transpose(1, 0, 2, 3).reshape(G, E * capacity, D)
+        flat = jnp.concatenate([flat, jnp.zeros((G, 1, D), flat.dtype)], 1)
+        picked = jax.vmap(lambda f, i: f[i])(flat, gsk)          # (G,S*k,D)
+        picked = picked.reshape(G, S, top_k, D)
+        out = jnp.einsum("gskd,gsk->gsd", picked.astype(jnp.float32),
+                         gate_vals).astype(xg.dtype)
+    else:
+        # combine[g, s, e, c] = gate weight of token (g,s) in expert e, slot c
+        pos_oh = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)  # (G, S, k, C)
+        combine = jnp.einsum("gsk,gske,gskc->gsec", gate_vals, onehot, pos_oh)
+        dispatch = (combine > 0).astype(xg.dtype)                  # (G, S, E, C)
+        if sharder is not None:
+            dispatch = sharder.constrain(dispatch, ("moe_groups", None, None, None))
+        # bf16 output on purpose: the EP collective (data->model resharding of
+        # xin) must move bf16, not the fp32 pre-cast (§Perf B iteration 3)
+        xin = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+        eout = expert_ffn(xin)
+        out = jnp.einsum("gsec,egcd->gsd", combine.astype(xg.dtype),
+                         eout).astype(xg.dtype)
+
+    # Switch aux-loss stats: fraction routed + mean router prob per expert.
+    me = jnp.mean(probs, axis=(0, 1))                            # (E,)
+    ce = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))               # top-1 fraction
+    return out, me, ce
+
+
+def moe_apply(
+    params: dict,
+    x: jnp.ndarray,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 1024,
+    activation: str = "silu",
+    sharder=None,
+    n_waves: int = 16,
+    dispatch_mode: str = "einsum",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss scalar).
+
+    Tokens reshape to (waves, G, group_size, D): a lax.scan over waves bounds
+    live dispatch memory; the G parallel groups per wave keep every data
+    shard busy (G is batch-sharded).
+    """
+    B, S, D = x.shape
+    E = params["router"].shape[1]
+    tokens = B * S
+    gs = min(group_size, tokens)
+    n_groups = tokens // gs
+    if tokens % gs:
+        raise ValueError(f"tokens={tokens} not divisible by group_size={gs}")
+    waves = min(n_waves, n_groups)
+    while n_groups % waves:
+        waves -= 1
+    G = n_groups // waves
+    capacity = max(4, int(gs * top_k * capacity_factor / E))
+
+    xf = x.reshape(waves, G, gs, D)
+    if sharder is not None:
+        xf = sharder.constrain(xf, (None, "moe_groups", None, "embed"))
+
+    def body(_, xg):
+        out, me, ce = _group_moe(params, xg, top_k, capacity, activation,
+                                 sharder, dispatch_mode)
+        return None, (out, me, ce)
+
+    # remat per wave: the backward recomputes one wave's dispatch/expert
+    # activations at a time instead of saving all waves' (big, fp32) buffers
+    _, (out, me, ce) = jax.lax.scan(jax.checkpoint(body), None, xf)
+    aux = E * jnp.mean(jnp.sum(me[None] * ce[None], axis=-1))    # Switch aux loss
+
+    out = out.reshape(B, S, D)
+    if "shared" in params:
+        sh = params["shared"]
+        up = jnp.einsum("...d,df->...f", x, sh["up"])
+        gate = jnp.einsum("...d,df->...f", x, sh["gate"])
+        h = (ACTIVATIONS[activation](gate) * up).astype(x.dtype)
+        out = out + jnp.einsum("...f,fd->...d", h, sh["down"]).astype(x.dtype)
+    return out, aux

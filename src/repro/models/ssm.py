@@ -1,0 +1,195 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) block.
+
+The chunked SSD algorithm: within chunks of Q tokens the recurrence is
+computed as masked-decay matmuls (MXU-shaped); across chunks a lax.scan
+carries the (H, P, N) state.  ngroups=1 (all assigned SSM archs).
+
+The depthwise causal conv over the x-path channels is the paper-technique
+integration point (DESIGN §4): it calls ``core.conv1d.causal_conv1d`` — the
+stencil engine's 1D causal encoding — and its decode step carries the K-1
+left halo as recurrent state.  Projections are split (z / x / BC / dt) so
+the inner dim and heads shard cleanly over the model axis; the depthwise
+conv is channel-parallel, so TP costs it no communication.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv1d import causal_conv1d, causal_conv1d_update
+from repro.models.layers import ParamDef, rms_norm
+
+
+def mamba2_table(d_model: int, d_inner: int, n_heads: int, d_state: int,
+                 d_conv: int) -> dict:
+    return {
+        "z_proj": ParamDef((d_model, d_inner), ("embed", "conv_channels")),
+        "x_proj": ParamDef((d_model, d_inner), ("embed", "conv_channels")),
+        "bc_proj": ParamDef((d_model, 2 * d_state), ("embed", None)),
+        "dt_proj": ParamDef((d_model, n_heads), ("embed", "ssm_heads")),
+        "conv_w": ParamDef((d_conv, d_inner), ("conv_kernel", "conv_channels"), scale=0.5),
+        "conv_b": ParamDef((d_inner,), ("conv_channels",), scale="zero"),
+        "bc_conv_w": ParamDef((d_conv, 2 * d_state), ("conv_kernel", None), scale=0.5),
+        "bc_conv_b": ParamDef((2 * d_state,), (None,), scale="zero"),
+        "A_log": ParamDef((n_heads,), ("ssm_heads",), scale="zero", dtype=jnp.float32),
+        "D": ParamDef((n_heads,), ("ssm_heads",), scale="one", dtype=jnp.float32),
+        "dt_bias": ParamDef((n_heads,), ("ssm_heads",), scale="zero", dtype=jnp.float32),
+        "norm_w": ParamDef((d_inner,), ("conv_channels",), scale="one"),
+        "out_proj": ParamDef((d_inner, d_model), ("conv_channels", "embed")),
+    }
+
+
+def _ssd_chunk(carry, inp, *, H, P, N):
+    """One chunk of the SSD scan.  carry: state (B,H,P,N) fp32."""
+    state = carry
+    xdt, dA, Bc, Cc = inp          # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+    Q = dA.shape[1]
+    cum = jnp.cumsum(dA, axis=1)                    # (B,Q,H) fp32
+    total = cum[:, -1]                              # (B,H)
+
+    # Intra-chunk (diagonal block): scores[i,j] = (C_i.B_j) exp(cum_i - cum_j), i>=j
+    # x/B/C stream in bf16, the decay matrix is exponentiated in fp32 then
+    # cast for the matmuls, accumulation stays fp32 — the reference SSD
+    # kernel's precision scheme (§Perf D iteration 2).
+    cdtype = xdt.dtype
+    CB = jnp.einsum("bin,bjn->bij", Cc, Bc,
+                    preferred_element_type=jnp.float32)
+    decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])       # (B,i,j,H)
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, :, :, None]
+    L = jnp.where(causal, decay, 0.0)
+    y_diag = jnp.einsum("bij,bijh,bjhp->bihp", CB.astype(cdtype),
+                        L.astype(cdtype), xdt,
+                        preferred_element_type=jnp.float32)
+
+    # Inter-chunk: contribution of the carried state to every position.
+    y_off = jnp.einsum("bin,bhpn,bih->bihp", Cc.astype(jnp.float32), state,
+                       jnp.exp(cum), preferred_element_type=jnp.float32)
+
+    # State update: state' = state * exp(total) + sum_j B_j xdt_j exp(total - cum_j)
+    decay_to_end = jnp.exp(total[:, None, :] - cum)                # (B,Q,H)
+    new_state = state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+        "bjn,bjh,bjhp->bhpn", Bc.astype(jnp.float32), decay_to_end,
+        xdt.astype(jnp.float32), preferred_element_type=jnp.float32,
+    )
+    return new_state, y_diag + y_off
+
+
+def ssd_scan(xdt, dA, B, C, chunk: int, state0=None):
+    """Chunked SSD.  xdt: (B,L,H,P) fp32; dA: (B,L,H) fp32; B/C: (B,L,N) fp32.
+
+    Returns (y (B,L,H,P) fp32, final_state (B,H,P,N) fp32).
+    """
+    Bb, L, H, P = xdt.shape
+    N = B.shape[-1]
+    if L % chunk:
+        # ragged tail: zero-pad (xdt=0 contributes nothing; dA=0 decays by
+        # exp(0)=1) — the final state is unaffected and y is sliced back.
+        pad = chunk - L % chunk
+        padt = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        y, final = ssd_scan(padt(xdt), padt(dA), padt(B), padt(C), chunk, state0)
+        return y[:, :L], final
+    nc = L // chunk
+
+    def split(t):
+        return jnp.moveaxis(t.reshape(Bb, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xs = (split(xdt), split(dA), split(B), split(C))
+    state0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if state0 is None
+              else state0.astype(jnp.float32))
+    body = jax.checkpoint(
+        lambda c, i: _ssd_chunk(c, i, H=H, P=P, N=N)
+    )
+    final, ys = jax.lax.scan(body, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, L, H, P)
+    return y, final
+
+
+def mamba2_apply(params, x, *, n_heads, head_dim, d_state, chunk,
+                 sharder=None, initial_state=None, return_state=False):
+    """Full-sequence Mamba2 block.  x: (B, L, D) -> (B, L, D)."""
+    Bb, L, D = x.shape
+    d_inner = n_heads * head_dim
+
+    z = jnp.einsum("bld,di->bli", x, params["z_proj"]).astype(x.dtype)
+    xc = jnp.einsum("bld,di->bli", x, params["x_proj"]).astype(x.dtype)
+    bc = jnp.einsum("bld,di->bli", x, params["bc_proj"]).astype(x.dtype)
+    dt = jnp.einsum("bld,dh->blh", x, params["dt_proj"], preferred_element_type=jnp.float32)
+
+    # Stencil-engine causal convs (paper-technique integration, DESIGN §4).
+    xc = jax.nn.silu(causal_conv1d(xc, params["conv_w"], params["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    bc = jax.nn.silu(causal_conv1d(bc, params["bc_conv_w"], params["bc_conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    if sharder is not None:
+        xc = sharder.constrain(xc, ("batch", "seq", "conv_channels"))
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # (H,)
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(jnp.float32))  # (B,L,H) fp32
+    xh = xc.reshape(Bb, L, n_heads, head_dim)                       # bf16 stream
+    Bmat, Cmat = jnp.split(bc, 2, axis=-1)                          # (B,L,N) bf16
+
+    xdt = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    y, final = ssd_scan(xdt, dt * A, Bmat, Cmat, chunk,
+                        state0=initial_state)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(Bb, L, d_inner).astype(x.dtype)
+
+    # Gated RMSNorm then output projection.
+    y = rms_norm((y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 params["norm_w"])
+    out = jnp.einsum("bli,id->bld", y, params["out_proj"]).astype(x.dtype)
+    if return_state:
+        return out, final
+    return out
+
+
+def mamba2_decode(params, x_t, cache, *, n_heads, head_dim, d_state):
+    """One-token decode.  x_t: (B, D); cache: dict(conv_x, conv_bc, state)."""
+    Bb, D = x_t.shape
+    d_inner = n_heads * head_dim
+
+    z = (x_t @ params["z_proj"]).astype(x_t.dtype)
+    xc = (x_t @ params["x_proj"]).astype(x_t.dtype)
+    bc = (x_t @ params["bc_proj"]).astype(x_t.dtype)
+    dt = (x_t @ params["dt_proj"]).astype(jnp.float32)
+
+    conv_x, xc = causal_conv1d_update(cache["conv_x"], xc, params["conv_w"], params["conv_b"])
+    conv_bc, bc = causal_conv1d_update(cache["conv_bc"], bc, params["bc_conv_w"], params["bc_conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+    bc = jax.nn.silu(bc.astype(jnp.float32))
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(jnp.float32))   # (B,H)
+    xh = xc.reshape(Bb, n_heads, head_dim)
+    Bv, Cv = jnp.split(bc, 2, axis=-1)                                  # (B,N)
+
+    state = cache["state"].astype(jnp.float32)                          # (B,H,P,N)
+    decay = jnp.exp(dt * A)                                             # (B,H)
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bv)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cv)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(Bb, d_inner)
+
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype),
+                 params["norm_w"])
+    out = (y @ params["out_proj"]).astype(x_t.dtype)
+    new_cache = {"conv_x": conv_x, "conv_bc": conv_bc, "state": state.astype(cache["state"].dtype)}
+    return out, new_cache
+
+
+def mamba2_cache_shapes(batch: int, n_heads: int, head_dim: int, d_state: int,
+                        d_conv: int, d_inner: int, dtype):
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, d_conv - 1, d_inner), dtype),
+        "conv_bc": jax.ShapeDtypeStruct((batch, d_conv - 1, 2 * d_state), dtype),
+        "state": jax.ShapeDtypeStruct((batch, n_heads, head_dim, d_state), jnp.float32),
+    }
+
+
+def mamba2_cache_dims():
+    return {
+        "conv_x": ("batch", "conv_kernel", "conv_channels"),
+        "conv_bc": ("batch", "conv_kernel", None),
+        "state": ("batch", "ssm_heads", "ssm_headdim", "ssm_state"),
+    }

@@ -1,0 +1,533 @@
+"""Unified decoder-only transformer covering the dense / moe / ssm / hybrid /
+vlm families, with scan-over-layers (O(1) HLO size), per-layer remat, and
+logical-dims sharding annotations throughout.
+
+Three execution modes share one block implementation:
+  train   — full-seq causal forward, no cache;
+  prefill — full-seq causal forward, returns per-layer caches (stacked);
+  decode  — one token against the cache (attention: sequence-sharded cache,
+            flash-decoding combine; ssm: O(1) state update).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import attention, decode_attention
+from repro.models.layers import (
+    ParamDef,
+    apply_mrope,
+    apply_rope,
+    init_params,
+    param_dims,
+    param_shapes,
+    rms_norm,
+    stack_tables,
+)
+from repro.models.mlp import mlp_apply, mlp_table
+from repro.models.moe import moe_apply, moe_table
+from repro.models.ssm import (
+    mamba2_apply,
+    mamba2_cache_dims,
+    mamba2_cache_shapes,
+    mamba2_decode,
+    mamba2_table,
+)
+
+
+# ---------------------------------------------------------------------------
+# Parameter tables
+# ---------------------------------------------------------------------------
+
+def attn_table(cfg: ModelConfig) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = {
+        "wq": ParamDef((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        t["q_norm"] = ParamDef((hd,), ("head_dim",), scale="one")
+        t["k_norm"] = ParamDef((hd,), ("head_dim",), scale="one")
+    return t
+
+
+def block_table(cfg: ModelConfig, kind: str) -> dict:
+    D = cfg.d_model
+    if kind == "mamba":
+        return {
+            "norm": ParamDef((D,), ("embed",), scale="one"),
+            "mixer": mamba2_table(D, cfg.d_inner, cfg.n_ssm_heads,
+                                  cfg.ssm_state, cfg.d_conv),
+        }
+    t = {
+        "attn_norm": ParamDef((D,), ("embed",), scale="one"),
+        "attn": attn_table(cfg),
+        "mlp_norm": ParamDef((D,), ("embed",), scale="one"),
+    }
+    if kind == "moe":
+        t["moe"] = moe_table(D, cfg.n_experts, cfg.d_ff_expert,
+                             cfg.n_shared_experts)
+    else:
+        t["mlp"] = mlp_table(D, cfg.d_ff, cfg.gated_mlp)
+    return t
+
+
+def model_table(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.padded_vocab
+    t: dict[str, Any] = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), scale=1.0),
+        "final_norm": ParamDef((D,), ("embed",), scale="one"),
+        "lm_head": ParamDef((V, D), ("vocab", "embed")),
+    }
+    if cfg.family in ("dense", "vlm"):
+        t["layers"] = stack_tables(block_table(cfg, "dense"), cfg.n_layers)
+    elif cfg.family == "moe":
+        t["layers"] = stack_tables(block_table(cfg, "moe"), cfg.n_layers)
+    elif cfg.family == "ssm":
+        t["layers"] = stack_tables(block_table(cfg, "mamba"), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        k = cfg.attn_every
+        groups, rem = divmod(cfg.n_layers, k)
+        t["layers"] = stack_tables(
+            stack_tables(block_table(cfg, "mamba"), k), groups
+        )
+        if rem:
+            t["tail_layers"] = stack_tables(block_table(cfg, "mamba"), rem)
+        t["shared_attn"] = block_table(cfg, "dense")  # one block, reused
+    else:
+        raise ValueError(f"model_table does not handle family={cfg.family}")
+    return t
+
+
+def init_model(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    return init_params(model_table(cfg), key, dtype)
+
+
+def model_dims(cfg: ModelConfig):
+    return param_dims(model_table(cfg))
+
+
+def model_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return param_shapes(model_table(cfg), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block
+# ---------------------------------------------------------------------------
+
+def _apply_qk_norm(p, q, k, eps):
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], eps)
+        k = rms_norm(k, p["k_norm"], eps)
+    return q, k
+
+
+def _rope(cfg: ModelConfig, x, positions):
+    if cfg.m_rope_sections is not None:
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.m_rope_sections)
+    if positions is None:
+        return x
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def attn_apply(cfg: ModelConfig, p, x, *, positions, sharder, causal=True,
+               kv_source=None, use_rope=True):
+    """Full-sequence attention.  x: (B,S,D).  kv_source: cross-attn input."""
+    src = x if kv_source is None else kv_source
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"]).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"]).astype(x.dtype)
+    q, k = _apply_qk_norm(p, q, k, cfg.norm_eps)
+    if use_rope and kv_source is None:
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+    shard_heads = False
+    q_chunk = cfg.q_chunk
+    if sharder is not None:
+        if sharder.profile == "sp":
+            # sequence parallelism: q stays seq-sharded, kv gathered full-seq
+            q = sharder.constrain(q, ("batch", "seq", None, None))
+            k = sharder.constrain(k, ("batch", None, None, None))
+            v = sharder.constrain(v, ("batch", None, None, None))
+            q_chunk = x.shape[1]
+        else:
+            q = sharder.constrain(q, ("batch", None, "heads", None))
+            k = sharder.constrain(k, ("batch", None, None, None))
+            v = sharder.constrain(v, ("batch", None, None, None))
+            shard_heads = True
+    if cfg.attn_impl == "flash" and sharder is None:
+        # Pallas flash kernels (fwd + custom_vjp bwd); unsharded/TPU path —
+        # the sharded dry-run keeps the XLA path so HLO cost stays visible
+        from repro.kernels.flash_attention_bwd import flash_attention_trainable
+        out = flash_attention_trainable(q, k, v, causal, 512, 512, 0)
+    else:
+        out = attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                        shard_heads=shard_heads)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"]).astype(x.dtype)
+    return o, (k, v)
+
+
+def attn_decode_apply(cfg: ModelConfig, p, x, cache, kv_len, *, positions, sharder):
+    """One-token attention.  x: (B,1,D); cache: {k,v}: (B,S_max,KV,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"]).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"]).astype(x.dtype)
+    q, k = _apply_qk_norm(p, q, k, cfg.norm_eps)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, kv_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, kv_len, axis=1)
+    if sharder is not None:
+        k_cache = sharder.constrain(k_cache, ("batch", "kv_seq", None, None))
+        v_cache = sharder.constrain(v_cache, ("batch", "kv_seq", None, None))
+    out = decode_attention(q, k_cache, v_cache, kv_len + 1)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"]).astype(x.dtype)
+    return o, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Blocks (shared across modes)
+# ---------------------------------------------------------------------------
+
+def dense_block(cfg, p, x, *, positions, sharder, mode, cache=None, kv_len=0):
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    if mode == "decode":
+        a, new_cache = attn_decode_apply(cfg, p["attn"], h, cache, kv_len,
+                                         positions=positions, sharder=sharder)
+    else:
+        a, kv = attn_apply(cfg, p["attn"], h, positions=positions, sharder=sharder)
+        new_cache = {"k": kv[0], "v": kv[1]} if mode == "prefill" else None
+    x = x + a
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    if "moe" in p:
+        m, aux = moe_apply(
+            p["moe"], h, top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            group_size=cfg.moe_group_size if mode != "decode" else min(
+                cfg.moe_group_size, h.shape[0] * h.shape[1]),
+            activation=cfg.activation, sharder=sharder,
+            n_waves=cfg.moe_waves, dispatch_mode=cfg.moe_dispatch,
+        )
+    else:
+        m = mlp_apply(p["mlp"], h, cfg.activation, sharder)
+        aux = jnp.zeros((), jnp.float32)
+    return x + m, new_cache, aux
+
+
+def mamba_block(cfg, p, x, *, sharder, mode, cache=None):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    kw = dict(n_heads=cfg.n_ssm_heads, head_dim=cfg.ssm_head_dim,
+              d_state=cfg.ssm_state)
+    if mode == "decode":
+        y, new_cache = mamba2_decode(p["mixer"], h[:, 0], cache, **kw)
+        return x + y[:, None], new_cache
+    if mode == "prefill":
+        # run full-seq then capture final state + conv tails as the cache
+        y, final = mamba2_apply(p["mixer"], h, chunk=cfg.ssm_chunk,
+                                sharder=sharder, return_state=True, **kw)
+        K = cfg.d_conv
+        # conv halo: last K-1 *pre-conv* channel inputs
+        xc = jnp.einsum("bld,di->bli", h[:, -(K - 1):], p["mixer"]["x_proj"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        bcc = jnp.einsum("bld,di->bli", h[:, -(K - 1):], p["mixer"]["bc_proj"],
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        new_cache = {"conv_x": xc, "conv_bc": bcc,
+                     "state": final.astype(jnp.float32)}
+        return x + y, new_cache
+    y = mamba2_apply(p["mixer"], h, chunk=cfg.ssm_chunk, sharder=sharder, **kw)
+    return x + y, None
+
+
+# ---------------------------------------------------------------------------
+# Model forward (mode-dispatched, scan-over-layers)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens, sharder, vision_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if vision_embeds is not None:
+        nv = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, nv:]], axis=1)
+    if sharder is not None:
+        x = sharder.constrain(x, ("batch", "seq", "embed"))
+    return x
+
+
+def _run_layers(body, carry, stacked, remat: bool, remat_group: int):
+    """Scan ``body`` over stacked layer params with group-granular remat.
+
+    remat_group=g saves one residual set per g layers instead of per layer —
+    g× less live activation memory in the backward for ~one extra forward
+    recompute (and it sidesteps XLA hoisting the whole saved stack through
+    a dtype convert — see EXPERIMENTS §Perf iteration 1).
+    """
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    if not remat:
+        carry, _ = jax.lax.scan(body, carry, stacked)
+        return carry
+    g = remat_group if (remat_group > 1 and n % remat_group == 0) else 1
+    if g == 1:
+        carry, _ = jax.lax.scan(jax.checkpoint(body), carry, stacked)
+        return carry
+    grouped = jax.tree.map(lambda p: p.reshape(n // g, g, *p.shape[1:]), stacked)
+
+    def outer(carry, gp):
+        carry, _ = jax.lax.scan(body, carry, gp)
+        return carry, None
+
+    carry, _ = jax.lax.scan(jax.checkpoint(outer), carry, grouped)
+    return carry
+
+
+def forward(cfg: ModelConfig, params, tokens, *, positions=None, sharder=None,
+            vision_embeds=None, remat=True):
+    """Train-mode forward.  Returns (final hidden (B,S,D), aux_loss)."""
+    x = _embed(cfg, params, tokens, sharder, vision_embeds)
+    if positions is None:
+        positions = _default_positions(cfg, tokens)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, lp):
+            x, aux = carry
+            x, _, a = dense_block(cfg, lp, x, positions=positions,
+                                  sharder=sharder, mode="train")
+            if sharder is not None:
+                x = sharder.constrain(x, ("batch", "seq", "embed"))
+            return (x, aux + a), None
+        (x, aux0) = _run_layers(body, (x, aux0), params["layers"], remat,
+                                cfg.remat_group)
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            x, _ = mamba_block(cfg, lp, x, sharder=sharder, mode="train")
+            if sharder is not None:
+                x = sharder.constrain(x, ("batch", "seq", "embed"))
+            return x, None
+        x = _run_layers(body, x, params["layers"], remat, cfg.remat_group)
+    elif cfg.family == "hybrid":
+        def inner(x, lp):
+            x, _ = mamba_block(cfg, lp, x, sharder=sharder, mode="train")
+            return x, None
+        def group(x, gp):
+            x, _ = jax.lax.scan(inner, x, gp)
+            x, _, _ = dense_block(cfg, params["shared_attn"], x,
+                                  positions=positions, sharder=sharder,
+                                  mode="train")
+            if sharder is not None:
+                x = sharder.constrain(x, ("batch", "seq", "embed"))
+            return x, None
+        x, _ = jax.lax.scan(jax.checkpoint(group) if remat else group,
+                            x, params["layers"])
+        if "tail_layers" in params:
+            x = _run_layers(inner, x, params["tail_layers"], remat, 1)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux0
+
+
+def _default_positions(cfg, tokens):
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.m_rope_sections is not None:
+        return jnp.broadcast_to(pos, (3, B, S))
+    return pos
+
+
+def mask_pad_logits(logits, cfg: ModelConfig):
+    """-inf on the padded vocab rows (see ModelConfig.padded_vocab)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(ids < cfg.vocab_size, logits, -1e30)
+
+
+def logits_from_hidden(params, hidden):
+    """(B,S,D) @ lm_head.T — callers chunk this (train/xent handles vocab)."""
+    return jnp.einsum("bsd,vd->bsv", hidden, params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+# -- caches ------------------------------------------------------------------
+
+def attn_cache_shapes(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, KV, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, KV, hd), dtype),
+    }
+
+
+def attn_cache_dims():
+    return {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "kv_seq", "kv_heads", "head_dim")}
+
+
+def _stack_shapes(shapes, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), shapes)
+
+
+def _stack_dims(dims, extra=1):
+    return jax.tree.map(
+        lambda d: tuple([None] * extra + list(d)), dims,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the full decode cache of this model."""
+    if cfg.family in ("dense", "vlm", "moe"):
+        return _stack_shapes(attn_cache_shapes(cfg, batch, max_len, dtype),
+                             cfg.n_layers)
+    if cfg.family == "ssm":
+        return _stack_shapes(
+            mamba2_cache_shapes(batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                                cfg.ssm_state, cfg.d_conv, cfg.d_inner, dtype),
+            cfg.n_layers)
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        groups, rem = divmod(cfg.n_layers, k)
+        m = mamba2_cache_shapes(batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                                cfg.ssm_state, cfg.d_conv, cfg.d_inner, dtype)
+        out = {"groups": _stack_shapes(_stack_shapes(m, k), groups),
+               "attn": _stack_shapes(attn_cache_shapes(cfg, batch, max_len, dtype), groups)}
+        if rem:
+            out["tail"] = _stack_shapes(m, rem)
+        return out
+    raise ValueError(cfg.family)
+
+
+def cache_dims(cfg: ModelConfig):
+    if cfg.family in ("dense", "vlm", "moe"):
+        return _stack_dims(attn_cache_dims())
+    if cfg.family == "ssm":
+        return _stack_dims(mamba2_cache_dims())
+    if cfg.family == "hybrid":
+        rem = cfg.n_layers % cfg.attn_every
+        out = {"groups": _stack_dims(mamba2_cache_dims(), extra=2),
+               "attn": _stack_dims(attn_cache_dims())}
+        if rem:
+            out["tail"] = _stack_dims(mamba2_cache_dims())
+        return out
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, max_len, dtype))
+
+
+# -- prefill / decode ---------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, tokens, max_len, *, positions=None,
+            sharder=None, vision_embeds=None, dtype=jnp.bfloat16):
+    """Process a prompt; returns (last-position hidden (B,D), cache)."""
+    B, S = tokens.shape
+    x = _embed(cfg, params, tokens, sharder, vision_embeds)
+    if positions is None:
+        positions = _default_positions(cfg, tokens)
+
+    def pad_kv(kv):
+        k, v = kv["k"], kv["v"]
+        pad = [(0, 0), (0, max_len - k.shape[1]), (0, 0), (0, 0)]
+        out = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        if sharder is not None:
+            out = {n: sharder.constrain(t, ("batch", "kv_seq", None, None))
+                   for n, t in out.items()}
+        return out
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(x, lp):
+            x, cache, _ = dense_block(cfg, lp, x, positions=positions,
+                                      sharder=sharder, mode="prefill")
+            return x, pad_kv(cache)
+        x, caches = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            x, cache = mamba_block(cfg, lp, x, sharder=sharder, mode="prefill")
+            return x, cache
+        x, caches = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+    elif cfg.family == "hybrid":
+        def inner(x, lp):
+            x, c = mamba_block(cfg, lp, x, sharder=sharder, mode="prefill")
+            return x, c
+        def group(x, gp):
+            x, mc = jax.lax.scan(jax.checkpoint(inner), x, gp)
+            x, ac, _ = dense_block(cfg, params["shared_attn"], x,
+                                   positions=positions, sharder=sharder,
+                                   mode="prefill")
+            return x, (mc, pad_kv(ac))
+        x, (mcs, acs) = jax.lax.scan(jax.checkpoint(group), x, params["layers"])
+        caches = {"groups": mcs, "attn": acs}
+        if "tail_layers" in params:
+            x, tc = jax.lax.scan(jax.checkpoint(inner), x, params["tail_layers"])
+            caches["tail"] = tc
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x[:, -1], caches
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, kv_len, *,
+                sharder=None):
+    """One decode step.  token: (B,) int32; kv_len: int (current cache fill).
+
+    Returns (logits (B, V) fp32, updated cache).
+    """
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    if sharder is not None:
+        x = sharder.constrain(x, ("batch", None, "embed"))
+    pos = jnp.full((B, 1), kv_len, jnp.int32)
+    if cfg.m_rope_sections is not None:
+        pos = jnp.broadcast_to(pos, (3, B, 1))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(x, inp):
+            lp, c = inp
+            x, nc, _ = dense_block(cfg, lp, x, positions=pos, sharder=sharder,
+                                   mode="decode", cache=c, kv_len=kv_len)
+            return x, nc
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            lp, c = inp
+            x, nc = mamba_block(cfg, lp, x, sharder=sharder, mode="decode",
+                                cache=c)
+            return x, nc
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    elif cfg.family == "hybrid":
+        def inner(x, inp):
+            lp, c = inp
+            x, nc = mamba_block(cfg, lp, x, sharder=sharder, mode="decode",
+                                cache=c)
+            return x, nc
+        def group(x, inp):
+            gp, mc, ac = inp
+            x, nmc = jax.lax.scan(inner, x, (gp, mc))
+            x, nac, _ = dense_block(cfg, params["shared_attn"], x,
+                                    positions=pos, sharder=sharder,
+                                    mode="decode", cache=ac, kv_len=kv_len)
+            return x, (nmc, nac)
+        x, (nmc, nac) = jax.lax.scan(
+            group, x, (params["layers"], cache["groups"], cache["attn"]))
+        new_cache = {"groups": nmc, "attn": nac}
+        if "tail_layers" in params:
+            x, ntc = jax.lax.scan(inner, x, (params["tail_layers"], cache["tail"]))
+            new_cache["tail"] = ntc
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    logits = mask_pad_logits(logits, cfg)
+    return logits[:, 0], new_cache

@@ -1,0 +1,63 @@
+"""Vocab-sharded, sequence-chunked softmax cross-entropy.
+
+The full logits tensor (tokens × vocab) never materializes:
+  * the lm_head is vocab-sharded over the model axis, so each shard holds a
+    (chunk, V/tp) logits block; the max / sum-exp reductions over vocab make
+    SPMD emit the small combine collectives;
+  * a rematted lax.scan over token chunks bounds the live block to
+    (tokens/n_chunks, V/tp) fp32 — and the backward recomputes each chunk's
+    logits instead of storing them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_xent(
+    lm_head: jnp.ndarray,
+    hidden: jnp.ndarray,
+    labels: jnp.ndarray,
+    *,
+    sharder=None,
+    n_chunks: int = 8,
+    valid_vocab: int | None = None,
+) -> jnp.ndarray:
+    """lm_head: (V, D); hidden: (B, S, D); labels: (B, S) -> mean nll (fp32).
+
+    valid_vocab masks padded vocab rows (ModelConfig.padded_vocab) to -inf.
+    """
+    B, S, D = hidden.shape
+    V = lm_head.shape[0]
+    T = B * S
+    h = hidden.reshape(T, D)
+    y = labels.reshape(T)
+    if T % n_chunks:
+        n_chunks = next(c for c in range(n_chunks, 0, -1) if T % c == 0)
+    hc = h.reshape(n_chunks, T // n_chunks, D)
+    yc = y.reshape(n_chunks, T // n_chunks)
+    if sharder is not None:
+        # chunk token dim keeps the activation sharding (batch — and seq too
+        # in the sp profile); vocab rides the model axis where free
+        hc = sharder.constrain(hc, (None, "tokens", "embed"))
+        yc = sharder.constrain(yc, (None, "tokens"))
+
+    def body(acc, inp):
+        hx, yx = inp
+        logits = jnp.einsum("td,vd->tv", hx, lm_head,
+                            preferred_element_type=jnp.float32)
+        if sharder is not None:
+            logits = sharder.constrain(logits, ("tokens", "vocab"))
+        if valid_vocab is not None and valid_vocab < V:
+            ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+            logits = jnp.where(ids < valid_vocab, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(yx, V, dtype=jnp.float32)
+        correct = jnp.sum(logits * onehot, axis=-1)
+        return acc + jnp.sum(lse - correct), None
+
+    acc, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                          (hc, yc))
+    return acc / T

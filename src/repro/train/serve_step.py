@@ -1,0 +1,52 @@
+"""Serving steps: prefill (prompt -> cache + first logits) and decode
+(one token against the cache).  Mirrors the train step's structure so the
+dry-run can lower either per shape kind.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import ModelApi
+from repro.parallel.sharding import Sharder
+
+
+def make_prefill_step(api: ModelApi, sharder: Sharder | None, max_len: int):
+    def prefill_step(params, batch):
+        from repro.models.transformer import mask_pad_logits
+        last_hidden, cache = api.prefill(params, batch, max_len,
+                                         sharder=sharder)
+        logits = jnp.einsum("bd,vd->bv", last_hidden, params["lm_head"],
+                            preferred_element_type=jnp.float32)
+        if sharder is not None:
+            logits = sharder.constrain(logits, (None, "vocab"))
+        logits = mask_pad_logits(logits, api.cfg)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, cache
+
+    return prefill_step
+
+
+def make_decode_step(api: ModelApi, sharder: Sharder | None, kv_len: int):
+    """kv_len is static per compiled step (bucketed in a real server)."""
+    def decode_step(params, token, cache):
+        logits, new_cache = api.decode_step(params, token, cache, kv_len,
+                                            sharder=sharder)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    return decode_step
+
+
+def greedy_generate(api: ModelApi, params, batch, *, steps: int, max_len: int,
+                    sharder: Sharder | None = None):
+    """Reference generation loop (prefill + ``steps`` greedy decodes)."""
+    prefill = make_prefill_step(api, sharder, max_len)
+    token, cache = prefill(params, batch)
+    S = batch["tokens"].shape[1]
+    out = [token]
+    for i in range(steps - 1):
+        step = make_decode_step(api, sharder, S + i)
+        token, cache = step(params, token, cache)
+        out.append(token)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,75 @@
+"""The jit-able training step: bf16 compute off fp32 master params, chunked
+vocab-sharded loss, AdamW update.  ``make_train_step`` returns the function
+plus the in/out sharding trees the launcher (and dry-run) feed to jax.jit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import ModelApi
+from repro.optim.adamw import AdamWConfig, apply_update, init_state
+from repro.parallel.sharding import Sharder
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def loss_fn(api: ModelApi, params_f32, batch, sharder: Sharder | None,
+            compute_dtype=jnp.bfloat16):
+    params = cast_tree(params_f32, compute_dtype)
+    hidden, aux = api.forward(params, batch, sharder=sharder)
+    from repro.train.loss import chunked_xent
+    nll = chunked_xent(params["lm_head"], hidden, batch["labels"],
+                       sharder=sharder, valid_vocab=api.cfg.vocab_size)
+    loss = nll + MOE_AUX_WEIGHT * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def make_train_step(api: ModelApi, sharder: Sharder | None,
+                    opt: AdamWConfig, compute_dtype=jnp.bfloat16):
+    def train_step(state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(api, p, batch, sharder, compute_dtype),
+            has_aux=True,
+        )(state["params"])
+        new_state, opt_metrics = apply_update(state, grads, opt)
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(api: ModelApi, key):
+    params = api.init(key, jnp.float32)   # fp32 master
+    return init_state(params)
+
+
+def state_dims(api: ModelApi):
+    pdims = api.dims()
+    return {
+        "params": pdims,
+        "m": pdims,
+        "v": pdims,
+        "step": (),
+    }
+
+
+def state_shapes(api: ModelApi):
+    shapes = api.shapes(jnp.float32)
+    zeros = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), shapes)
+    return {
+        "params": shapes,
+        "m": zeros,
+        "v": jax.tree.map(lambda s: s, zeros),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }

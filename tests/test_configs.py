@@ -1,0 +1,74 @@
+"""The assigned architecture configs must match the assignment sheet exactly."""
+import pytest
+
+from repro.configs import JACOBI_CONFIGS, get_config, list_archs
+
+# (arch, layers, d_model, heads, kv, d_ff-or-expert, vocab)
+SHEET = {
+    "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+    "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+    "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_exact_assignment_numbers(arch):
+    cfg = get_config(arch)
+    L, D, H, KV, FF, V = SHEET[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == D
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.vocab_size == V
+    if cfg.family == "moe":
+        assert cfg.d_ff_expert == FF
+    elif cfg.family != "ssm":
+        assert cfg.d_ff == FF
+
+
+def test_moe_details():
+    m = get_config("moonshot-v1-16b-a3b")
+    assert (m.n_experts, m.top_k) == (64, 6)
+    q = get_config("qwen3-moe-30b-a3b")
+    assert (q.n_experts, q.top_k) == (128, 8)
+
+
+def test_ssm_details():
+    assert get_config("mamba2-370m").ssm_state == 128
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("mamba2-370m").n_ssm_heads == 32   # 2048/64
+
+
+def test_special_features():
+    assert get_config("qwen3-0.6b").qk_norm
+    assert get_config("qwen3-moe-30b-a3b").qk_norm
+    assert get_config("nemotron-4-15b").activation == "relu2"
+    assert get_config("qwen2-vl-2b").m_rope_sections is not None
+    assert get_config("whisper-tiny").n_enc_layers == 4
+    assert get_config("zamba2-1.2b").attn_every == 6
+
+
+def test_every_arch_has_smoke_config():
+    for arch in list_archs():
+        smoke = get_config(arch, smoke=True)
+        full = get_config(arch)
+        assert smoke.family == full.family
+        assert smoke.d_model <= 128
+
+
+def test_jacobi_configs_match_paper():
+    t1 = JACOBI_CONFIGS["table1-dense"]
+    assert t1.grid == (64, 64) and t1.iterations == 7   # CS-1 dense limit
+    assert JACOBI_CONFIGS["table1-conv"].iterations == 3500
+    assert JACOBI_CONFIGS["table1-conv"].problem_elements == 2048 * 10**6
+    assert JACOBI_CONFIGS["fig6-3d"].grid == (10, 64, 64)
+    shapes = [JACOBI_CONFIGS[f"fig5-{s}"].grid
+              for s in ("32x64", "64x64", "128x64", "128x128")]
+    assert shapes == [(32, 64), (64, 64), (128, 64), (128, 128)]

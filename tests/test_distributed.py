@@ -1,0 +1,211 @@
+"""Distribution tests — these run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main test process
+keeps its single-device view (per the assignment: only the dry-run forces
+fake devices).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(src: str, n: int = 8, timeout: int = 900) -> str:
+    code = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={n}'\n"
+        f"import sys; sys.path.insert(0, {os.path.join(REPO, 'src')!r})\n"
+        + textwrap.dedent(src)
+    )
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+class TestHaloExchange:
+    def test_distributed_jacobi_matches_reference(self):
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import laplace_jacobi, DirichletBC
+        from repro.core.distributed import make_distributed_jacobi
+        from repro.core.reference import jacobi_reference
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        spec = laplace_jacobi(2)
+        H, W, iters, bcv = 16, 8, 5, 1.5
+        run = make_distributed_jacobi(mesh, spec, H=H, W=W, bc_value=bcv,
+                                      iterations=iters)
+        rng = np.random.default_rng(0)
+        x0 = jnp.asarray(rng.standard_normal((2, H, W)), jnp.float32)
+        out = run(x0)
+        bc = DirichletBC(bcv)
+        ref = jnp.stack([jacobi_reference(x0[i], spec, bc, iters)
+                         for i in range(2)])
+        err = float(jnp.abs(out - ref).max())
+        assert err < 1e-5, err
+        print("halo ok", err)
+        """)
+        assert "halo ok" in out
+
+    def test_distributed_9point(self):
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import box, DirichletBC
+        from repro.core.distributed import make_distributed_jacobi
+        from repro.core.reference import jacobi_reference
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        spec = box(2)   # 9-point: corners must ride the two-phase exchange
+        run = make_distributed_jacobi(mesh, spec, H=8, W=16, bc_value=0.5,
+                                      iterations=3)
+        rng = np.random.default_rng(1)
+        x0 = jnp.asarray(rng.standard_normal((1, 8, 16)), jnp.float32)
+        ref = jnp.stack([jacobi_reference(x0[0], spec, DirichletBC(0.5), 3)])
+        err = float(jnp.abs(run(x0) - ref).max())
+        assert err < 1e-5, err
+        print("box ok")
+        """)
+        assert "box ok" in out
+
+
+class TestPipeline:
+    def test_gpipe_matches_sequential_and_grads(self):
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.parallel.pipeline import gpipe, split_stages
+
+        mesh = jax.make_mesh((4,), ("stage",))
+        L, D = 8, 16
+        rng = np.random.default_rng(0)
+        W = jnp.asarray(rng.standard_normal((L, D, D)) * 0.2, jnp.float32)
+
+        def stage_fn(ws, x):
+            def body(x, w):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(body, x, ws)
+            return x
+
+        x = jnp.asarray(rng.standard_normal((8, 5, D)), jnp.float32)
+        pipe = gpipe(stage_fn, mesh, "stage", n_microbatches=4)
+        with mesh:
+            outp = pipe(split_stages(W, 4), x)
+        ref = x
+        for l in range(L):
+            ref = jnp.tanh(ref @ W[l])
+        assert float(jnp.abs(outp - ref).max()) < 1e-5
+
+        def loss(W):
+            return jnp.sum(pipe(split_stages(W, 4), x) ** 2)
+        def loss_ref(W):
+            r = x
+            for l in range(L): r = jnp.tanh(r @ W[l])
+            return jnp.sum(r ** 2)
+        with mesh:
+            g1 = jax.grad(loss)(W)
+        g2 = jax.grad(loss_ref)(W)
+        assert float(jnp.abs(g1 - g2).max()) < 1e-5
+        print("pipe ok")
+        """)
+        assert "pipe ok" in out
+
+
+class TestShardedTraining:
+    def test_tp_training_matches_single_device(self):
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.models.model_zoo import build
+        from repro.optim.adamw import AdamWConfig
+        from repro.parallel.sharding import Sharder, tree_shardings
+        from repro.train.train_step import (init_train_state, make_train_step,
+                                            state_dims)
+
+        cfg = get_config("qwen3-0.6b", smoke=True)
+        api = build(cfg)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16))),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)))}
+
+        # single-device reference
+        state0 = init_train_state(api, jax.random.PRNGKey(0))
+        step_ref = make_train_step(api, None, AdamWConfig())
+        sref, mref = step_ref(state0, batch)
+
+        # sharded over (2 data, 4 model)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        sharder = Sharder(mesh=mesh, profile="tp")
+        step_sh = make_train_step(api, sharder, AdamWConfig())
+        with mesh:
+            ssh, msh = jax.jit(step_sh)(state0, batch)
+        a = float(mref["loss"]); b = float(msh["loss"])
+        assert abs(a - b) < 1e-3, (a, b)
+        d = jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()),
+                         sref["params"], ssh["params"])
+        worst = max(jax.tree.leaves(d))
+        assert worst < 1e-4, worst
+        print("tp ok", a, b, worst)
+        """)
+        assert "tp ok" in out
+
+    def test_sp_profile_matches_single_device(self):
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.models.model_zoo import build
+        from repro.optim.adamw import AdamWConfig
+        from repro.parallel.sharding import Sharder
+        from repro.train.train_step import init_train_state, make_train_step
+
+        cfg = get_config("phi3-medium-14b", smoke=True)   # sp profile
+        api = build(cfg)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16))),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)))}
+        state0 = init_train_state(api, jax.random.PRNGKey(0))
+        _, mref = make_train_step(api, None, AdamWConfig())(state0, batch)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        sharder = Sharder(mesh=mesh, profile="sp")
+        with mesh:
+            _, msh = jax.jit(make_train_step(api, sharder, AdamWConfig()))(state0, batch)
+        a, b = float(mref["loss"]), float(msh["loss"])
+        assert abs(a - b) < 1e-3, (a, b)
+        print("sp ok", a, b)
+        """)
+        assert "sp ok" in out
+
+    def test_decode_with_sharded_cache(self):
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.models.model_zoo import build
+        from repro.parallel.sharding import Sharder
+
+        cfg = get_config("glm4-9b", smoke=True)
+        api = build(cfg)
+        params = api.init(jax.random.PRNGKey(0), jnp.float32)
+        rng = np.random.default_rng(0)
+        B, S = 4, 12
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))}
+
+        # unsharded reference
+        _, cache = api.prefill(params, batch, max_len=16)
+        tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B,)))
+        ref_logits, _ = api.decode_step(params, tok, cache, S)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        sharder = Sharder(mesh=mesh, profile="tp")
+        with mesh:
+            _, cache_s = jax.jit(lambda p, b: api.prefill(p, b, 16,
+                                 sharder=sharder))(params, batch)
+            logits_s, _ = jax.jit(lambda p, t, c: api.decode_step(
+                p, t, c, S, sharder=sharder))(params, tok, cache_s)
+        err = float(jnp.abs(ref_logits - logits_s).max())
+        assert err < 2e-2, err
+        print("decode ok", err)
+        """)
+        assert "decode ok" in out

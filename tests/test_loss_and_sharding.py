@@ -1,0 +1,158 @@
+"""Chunked vocab-sharded loss vs direct xent; sharding rule unit tests;
+hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import Sharder
+from repro.train.loss import chunked_xent
+
+RNG = np.random.default_rng(11)
+
+
+class TestChunkedXent:
+    @pytest.mark.parametrize("n_chunks", [1, 2, 8])
+    def test_matches_direct(self, n_chunks):
+        B, S, D, V = 2, 16, 8, 50
+        lm = jnp.asarray(RNG.standard_normal((V, D)), jnp.float32)
+        h = jnp.asarray(RNG.standard_normal((B, S, D)), jnp.float32)
+        y = jnp.asarray(RNG.integers(0, V, (B, S)))
+        out = chunked_xent(lm, h, y, n_chunks=n_chunks)
+        logits = jnp.einsum("bsd,vd->bsv", h, lm)
+        direct = -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(logits, -1), y[..., None], -1))
+        assert float(out) == pytest.approx(float(direct), rel=1e-5)
+
+    def test_grads_match_direct(self):
+        B, S, D, V = 2, 8, 8, 30
+        lm = jnp.asarray(RNG.standard_normal((V, D)), jnp.float32)
+        h = jnp.asarray(RNG.standard_normal((B, S, D)), jnp.float32)
+        y = jnp.asarray(RNG.integers(0, V, (B, S)))
+        g1 = jax.grad(lambda l: chunked_xent(l, h, y, n_chunks=4))(lm)
+        def direct(l):
+            logits = jnp.einsum("bsd,vd->bsv", h, l)
+            return -jnp.mean(jnp.take_along_axis(
+                jax.nn.log_softmax(logits, -1), y[..., None], -1))
+        g2 = jax.grad(direct)(lm)
+        np.testing.assert_allclose(g1, g2, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(b=st.integers(1, 4), s=st.integers(2, 24), v=st.integers(5, 80))
+    def test_property_loss_bounded(self, b, s, v):
+        # nll of any distribution over v classes lies in [0, ~log v + margin]
+        lm = jnp.asarray(np.random.default_rng(v).standard_normal((v, 8)) * 0.1,
+                         jnp.float32)
+        h = jnp.asarray(np.random.default_rng(s).standard_normal((b, s, 8)),
+                        jnp.float32)
+        y = jnp.asarray(np.random.default_rng(b).integers(0, v, (b, s)))
+        out = float(chunked_xent(lm, h, y))
+        assert 0.0 <= out <= np.log(v) + 5.0
+
+
+class _FakeMesh:
+    """Duck-typed mesh: Sharder.spec only needs shape + axis_names."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+class TestSharderRules:
+    MESH = _FakeMesh(data=16, model=16)
+
+    def test_heads_shard_when_divisible(self):
+        sh = Sharder(mesh=self.MESH, profile="tp")
+        assert sh.spec(("embed", "heads", "head_dim"), (64, 48, 128)) == \
+            P(None, "model", None)
+
+    def test_heads_replicate_when_not_divisible(self):
+        sh = Sharder(mesh=self.MESH, profile="tp")
+        # whisper-tiny: 6 heads on a 16-wide axis -> replicated
+        assert sh.spec(("embed", "heads", "head_dim"), (384, 6, 64)) == \
+            P(None, None, None)
+
+    def test_axis_used_once(self):
+        sh = Sharder(mesh=self.MESH, profile="tp")
+        spec = sh.spec(("vocab", "dff"), (1600, 1600))
+        # both want "model"; second falls back to None
+        assert spec == P("model", None)
+
+    def test_batch_composite_multipod(self):
+        sh = Sharder(mesh=_FakeMesh(pod=2, data=16, model=16), profile="tp")
+        assert sh.spec(("batch", "seq"), (256, 4096)) == P(("pod", "data"), None)
+        # batch=1 (long_500k): not divisible -> replicated
+        assert sh.spec(("batch", "seq"), (1, 4096)) == P(None, None)
+
+    def test_sp_profile_seq_shards(self):
+        sh = Sharder(mesh=self.MESH, profile="sp")
+        assert sh.spec(("batch", "seq", "embed"), (256, 4096, 5120)) == \
+            P("data", "model", None)
+        # weights ZeRO over data in sp
+        assert sh.spec(("embed", "dff"), (5120, 17920)) == P("data", None)
+
+    def test_opt_spec_adds_data_axis(self):
+        sh = Sharder(mesh=self.MESH, profile="tp")
+        # param: dff sharded on model; opt state also shards embed on data
+        assert sh.opt_spec(("embed", "dff"), (64, 128)) == P("data", "model")
+
+    def test_state_over_data_decode(self):
+        sh = Sharder(mesh=self.MESH, profile="tp", state_over_data=True)
+        spec = sh.spec(("batch", "ssm_heads", "ssm_headdim", "ssm_state"),
+                       (1, 32, 64, 128))
+        assert spec == P(None, "model", "data", None)
+
+
+class TestHaloPerms:
+    def test_shift_perm_non_wrapping(self):
+        from repro.parallel.halo import _shift_perm
+        assert _shift_perm(4, +1) == [(0, 1), (1, 2), (2, 3)]
+        assert _shift_perm(4, -1) == [(1, 0), (2, 1), (3, 2)]
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(2, 8))
+    def test_perms_are_bijective_partial(self, n):
+        from repro.parallel.halo import _shift_perm
+        for d in (+1, -1):
+            perm = _shift_perm(n, d)
+            srcs = [a for a, _ in perm]
+            dsts = [b for _, b in perm]
+            assert len(set(srcs)) == len(srcs)
+            assert len(set(dsts)) == len(dsts)
+
+
+class TestHLOCostAnalyzer:
+    def test_scan_trip_count(self):
+        from repro.launch.hlo_cost import analyze
+
+        def f(x, w):
+            def body(x, wi):
+                return x @ wi, None
+            x, _ = jax.lax.scan(body, x, w)
+            return x
+        hlo = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((64, 64), jnp.float32),
+            jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)).compile().as_text()
+        r = analyze(hlo)
+        assert r["flops"] == pytest.approx(2 * 64**3 * 12, rel=0.01)
+
+    def test_nested_scan_with_remat(self):
+        from repro.launch.hlo_cost import analyze
+
+        def g(x, w):
+            w2 = w.reshape(4, 2, 32, 32)
+            def outer(x, gw):
+                def inner(x, wi):
+                    return x @ wi, None
+                x, _ = jax.lax.scan(inner, x, gw)
+                return x, None
+            x, _ = jax.lax.scan(jax.checkpoint(outer), x, w2)
+            return jnp.sum(x)
+        hlo = jax.jit(jax.grad(g, argnums=1)).lower(
+            jax.ShapeDtypeStruct((16, 32), jnp.float32),
+            jax.ShapeDtypeStruct((8, 32, 32), jnp.float32)).compile().as_text()
+        r = analyze(hlo)
+        # fwd + remat-fwd + 2x bwd = 4x fwd flops
+        assert r["flops"] == pytest.approx(4 * 2 * 16 * 32 * 32 * 8, rel=0.05)

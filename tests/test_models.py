@@ -1,0 +1,154 @@
+"""Model zoo: per-arch smoke tests (reduced configs, one forward/train step on
+CPU, shape + finiteness asserts) and decode-consistency checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models.model_zoo import build
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+RNG = np.random.default_rng(3)
+
+
+def _batch(cfg, B, S):
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S))),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S))),
+    }
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jnp.asarray(
+            RNG.standard_normal((B, cfg.enc_len, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            RNG.standard_normal((B, cfg.n_vision_tokens, cfg.d_model)),
+            jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        batch["positions"] = jnp.broadcast_to(pos, (3, B, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_config(arch, smoke=True)
+        api = build(cfg)
+        params = api.init(jax.random.PRNGKey(0), jnp.float32)
+        B, S = 2, 16
+        hidden, aux = api.forward(params, _batch(cfg, B, S))
+        assert hidden.shape == (B, S, cfg.d_model)
+        assert bool(jnp.all(jnp.isfinite(hidden)))
+        assert bool(jnp.isfinite(aux))
+
+    def test_one_train_step(self, arch):
+        cfg = get_config(arch, smoke=True)
+        api = build(cfg)
+        state = init_train_state(api, jax.random.PRNGKey(0))
+        step = make_train_step(api, None, AdamWConfig(total_steps=10,
+                                                      warmup_steps=2))
+        new_state, metrics = step(state, _batch(cfg, 2, 16))
+        assert bool(jnp.isfinite(metrics["loss"]))
+        assert int(new_state["step"]) == 1
+        # params actually changed
+        d0 = jax.tree.leaves(state["params"])[0]
+        d1 = jax.tree.leaves(new_state["params"])[0]
+        assert not np.allclose(d0, d1)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_matches_forward(arch):
+    """prefill(S tokens) + decode = forward(S+1 tokens) at the last position."""
+    cfg = get_config(arch, smoke=True)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(1), jnp.float32)
+    B, S = 2, 12
+    batch = _batch(cfg, B, S + 1)
+    full = dict(batch)
+    prefix = dict(batch, tokens=batch["tokens"][:, :S])
+    if "positions" in batch:
+        prefix["positions"] = batch["positions"][..., :S]
+
+    # full forward logits at position S (predicting token S+1)
+    from repro.models.layers import rms_norm
+    if cfg.family == "encdec":
+        from repro.models import encdec as E
+        enc = E.encode(cfg, params, batch["enc_frames"])
+        hidden = E.decode_train(cfg, params, batch["tokens"], enc)
+    else:
+        from repro.models import transformer as T
+        hidden, _ = T.forward(cfg, params, batch["tokens"],
+                              positions=batch.get("positions"),
+                              vision_embeds=batch.get("vision_embeds"))
+    logits_full = jnp.einsum("bd,vd->bv", hidden[:, S], params["lm_head"])
+
+    # prefill S tokens then decode token S
+    _, cache = api.prefill(params, prefix, max_len=S + 4)
+    logits_dec, _ = api.decode_step(params, batch["tokens"][:, S], cache, S)
+
+    np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(logits_full),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_remat_group_grad_equivalence():
+    cfg = dataclasses.replace(get_config("qwen3-0.6b", smoke=True), n_layers=4)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0), jnp.float32)
+    batch = _batch(cfg, 2, 16)
+    from repro.train.train_step import loss_fn
+
+    def grad_with(rg):
+        c = dataclasses.replace(cfg, remat_group=rg)
+        a = build(c)
+        return jax.value_and_grad(lambda p: loss_fn(a, p, batch, None)[0])(params)
+
+    (l1, g1), (l2, g2) = grad_with(1), grad_with(2)
+    assert float(l1) == pytest.approx(float(l2), abs=1e-6)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_param_counts_close_to_nameplate():
+    # full configs should land near their nameplate sizes
+    expect = {
+        "nemotron-4-15b": (15e9, 0.35),
+        "glm4-9b": (9e9, 0.35),
+        "qwen2-vl-2b": (2e9, 0.45),
+        "phi3-medium-14b": (14e9, 0.35),
+        "zamba2-1.2b": (1.2e9, 0.45),
+        "mamba2-370m": (370e6, 0.45),
+        "qwen3-moe-30b-a3b": (30e9, 0.35),
+        # the assignment's 48L x 64e x 1408 arithmetic gives 28.9B, not the
+        # 16B nameplate (real Moonlight is 27 layers); we follow the
+        # assignment numbers exactly — see DESIGN §Arch-applicability.
+        "moonshot-v1-16b-a3b": (28.9e9, 0.1),
+    }
+    for arch, (target, tol) in expect.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, f"{arch}: {n:.3e} vs {target:.3e}"
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    from repro.models.moe import moe_apply, moe_table
+    from repro.models.layers import init_params
+    D, E = 32, 8
+    params = init_params(moe_table(D, E, 64), jax.random.PRNGKey(0), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((2, 64, D)), jnp.float32)
+    out, aux = moe_apply(params, x, top_k=2, capacity_factor=0.5,
+                         group_size=64)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_mrope_reduces_to_rope_for_text():
+    from repro.models.layers import apply_mrope, apply_rope
+    B, S, H, hd = 2, 8, 2, 16
+    x = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mpos = jnp.broadcast_to(pos, (3, B, S))
+    a = apply_rope(x, pos, 1e4)
+    b = apply_mrope(x, mpos, 1e4, (3, 3, 2))
+    np.testing.assert_allclose(a, b, atol=1e-6)

@@ -1,0 +1,149 @@
+"""Core stencil DSL: every encoding must match the reference oracle, and the
+FLOP accounting must match the paper's §4 numbers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BoundaryMode,
+    DirichletBC,
+    StencilSpec,
+    box,
+    build_dense_matrix,
+    conv_jacobi_2d,
+    conv_jacobi_3d_channels,
+    conv_jacobi_3d_native,
+    dense_jacobi_with_bc,
+    encoding_flops_per_point,
+    jacobi_reference,
+    laplace_jacobi,
+    star,
+)
+
+RNG = np.random.default_rng(42)
+
+
+def _ref(x0, spec, bc, iters):
+    return jnp.stack([jacobi_reference(x0[i], spec, bc, iters)
+                      for i in range(x0.shape[0])])
+
+
+class TestPaperFlopAccounting:
+    def test_useful_flops_2d(self):
+        # paper §4: "7 useful calculations ... four multiplications and three additions"
+        assert laplace_jacobi(2).useful_flops_per_point == 7
+
+    def test_conv_flops_2d(self):
+        # paper §4: "convolution layer by contrast undertakes 17 operations"
+        assert laplace_jacobi(2).delivered_flops_per_point_conv() == 17
+
+    def test_dense_flops_n4096(self):
+        # paper §4: "with X=Y=64 and therefore N=4096, there are 8191 operations"
+        assert laplace_jacobi(2).delivered_flops_per_point_dense(4096) == 8191
+
+    def test_conv_total_ops_64x64(self):
+        # paper §4: "69632 total operations for the 2D case where X=Y=64"
+        spec = laplace_jacobi(2)
+        assert spec.delivered_flops_per_point_conv() * 64 * 64 == 69632
+
+    def test_dense_total_ops_64x64(self):
+        # paper §4: "33550336 total calculations for the entire input tensor"
+        spec = laplace_jacobi(2)
+        assert spec.delivered_flops_per_point_dense(4096) * 4096 == 33550336
+
+    def test_mask_trick_overhead(self):
+        spec = laplace_jacobi(2)
+        assert (encoding_flops_per_point(spec, "conv", mask_trick=True)
+                - encoding_flops_per_point(spec, "conv", mask_trick=False)) == 2
+
+
+class TestSpec:
+    def test_laplace_2d_kernel_matches_fig2(self):
+        ker = laplace_jacobi(2).to_kernel()
+        expect = np.array([[0, .25, 0], [.25, 0, .25], [0, .25, 0]], np.float32)
+        np.testing.assert_array_equal(ker, expect)
+
+    def test_radius_and_footprint(self):
+        assert laplace_jacobi(3).radius == 1
+        assert laplace_jacobi(3).footprint == (3, 3, 3)
+        assert star(2, [0.1, 0.2]).radius == 2
+
+    def test_spec_is_hashable(self):
+        hash(laplace_jacobi(2))
+        assert laplace_jacobi(2) == laplace_jacobi(2)
+
+
+class TestEncodings2D:
+    @pytest.mark.parametrize("shape", [(1, 8, 8), (2, 13, 9), (1, 24, 17)])
+    @pytest.mark.parametrize("bc_val", [0.0, 1.0, -2.5])
+    def test_dense_matches_reference(self, shape, bc_val):
+        spec = laplace_jacobi(2)
+        bc = DirichletBC(bc_val)
+        x0 = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+        ref = _ref(x0, spec, bc, 5)
+        out = dense_jacobi_with_bc(x0, spec, bc, 5)
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    @pytest.mark.parametrize("mode", [BoundaryMode.MASK, BoundaryMode.PAD])
+    def test_conv_matches_reference(self, mode):
+        spec = laplace_jacobi(2)
+        bc = DirichletBC(1.5)
+        x0 = jnp.asarray(RNG.standard_normal((2, 16, 12)), jnp.float32)
+        ref = _ref(x0, spec, bc, 6)
+        out = conv_jacobi_2d(x0, spec, bc, 6, mode)
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_dense_matrix_has_identity_boundary_rows(self):
+        # paper Fig 1: boundary cells keep their value via 1 on the diagonal
+        m = build_dense_matrix((3, 3), laplace_jacobi(2))
+        for i in range(9):
+            if i != 4:
+                assert m[i, i] == 1.0
+        assert m[4, 4] == 0.0
+        assert m[1, 4] == 0.25  # neighbour contribution into the centre
+
+    def test_box_stencil(self):
+        spec = box(2)
+        bc = DirichletBC(0.5)
+        x0 = jnp.asarray(RNG.standard_normal((1, 10, 10)), jnp.float32)
+        ref = _ref(x0, spec, bc, 3)
+        out = conv_jacobi_2d(x0, spec, bc, 3, BoundaryMode.MASK)
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+class TestEncodings3D:
+    def test_channels_trick_matches_reference(self):
+        # paper Figures 3-4: 3D via Conv2D channels
+        spec = laplace_jacobi(3)
+        bc = DirichletBC(1.0)
+        x0 = jnp.asarray(RNG.standard_normal((1, 10, 12, 8)), jnp.float32)
+        ref = _ref(x0, spec, bc, 4)
+        out = conv_jacobi_3d_channels(x0, spec, bc, 4)
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_native_conv3d_matches_channels_trick(self):
+        spec = laplace_jacobi(3)
+        bc = DirichletBC(2.0)
+        x0 = jnp.asarray(RNG.standard_normal((1, 6, 9, 7)), jnp.float32)
+        a = conv_jacobi_3d_channels(x0, spec, bc, 3)
+        b = conv_jacobi_3d_native(x0, spec, bc, 3)
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+    def test_dense_3d(self):
+        spec = laplace_jacobi(3)
+        bc = DirichletBC(0.0)
+        x0 = jnp.asarray(RNG.standard_normal((1, 5, 6, 4)), jnp.float32)
+        ref = _ref(x0, spec, bc, 2)
+        out = dense_jacobi_with_bc(x0, spec, bc, 2)
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+class TestConvergence:
+    def test_jacobi_converges_to_bc_value(self):
+        # Laplace with constant Dirichlet BC converges to the constant
+        spec = laplace_jacobi(2)
+        bc = DirichletBC(3.0)
+        x0 = jnp.asarray(RNG.standard_normal((1, 8, 8)), jnp.float32)
+        out = conv_jacobi_2d(x0, spec, bc, 500)
+        np.testing.assert_allclose(out, 3.0, atol=1e-3)
