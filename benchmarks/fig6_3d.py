@@ -2,22 +2,20 @@
 conditions — the channels-trick Conv2D encoding (the only 3D path the CS-1
 stack supported) vs the native Conv3D and direct-stencil paths the paper
 could not use.  Quantifies the Z²-banded channel matrix overhead.
+
+All paths dispatch through the unified ``make_plan`` API (core/plan.py).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
     DeliveredPerf,
-    DirichletBC,
-    conv_jacobi_3d_channels,
-    conv_jacobi_3d_native,
     encoding_flops_per_point,
     laplace_jacobi,
+    make_plan,
 )
-from repro.kernels import jacobi3d
 from benchmarks.common import csv_row, time_callable
 
 GRID = (10, 64, 64)  # (Z, X, Y) — the largest supported shape on the CS-1
@@ -25,14 +23,13 @@ GRID = (10, 64, 64)  # (Z, X, Y) — the largest supported shape on the CS-1
 
 def run(steps: int = 4, iters: int = 50, kernel_iters: int = 5):
     spec = laplace_jacobi(3)
-    bc = DirichletBC(1.0)
     n = GRID[0] * GRID[1] * GRID[2]
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((steps, *GRID)), jnp.float32)
     rows = []
 
-    f_ch = jax.jit(lambda xx: conv_jacobi_3d_channels(xx, spec, bc, iters))
-    sec = time_callable(f_ch, x)
+    p_ch = make_plan(spec, GRID, backend="conv", bc=1.0, iters=iters)
+    sec = time_callable(p_ch, x)
     perf = DeliveredPerf(n * steps,
                          encoding_flops_per_point(spec, "conv3d_channels",
                                                   n_total=GRID[0]),
@@ -41,17 +38,16 @@ def run(steps: int = 4, iters: int = 50, kernel_iters: int = 5):
                         f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
                         f"waste x{perf.waste_ratio:.1f} (Z-banded matrix)"))
 
-    f_nat = jax.jit(lambda xx: conv_jacobi_3d_native(xx, spec, bc, iters))
-    sec = time_callable(f_nat, x)
+    p_nat = make_plan(spec, GRID, backend="conv3d_native", bc=1.0, iters=iters)
+    sec = time_callable(p_nat, x)
     perf = DeliveredPerf(n * steps, encoding_flops_per_point(spec, "conv"),
                          13, iters, sec)
     rows.append(csv_row("fig6/native-conv3d", sec,
                         f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
                         f"waste x{perf.waste_ratio:.1f}"))
 
-    f_k = lambda xx: jacobi3d(xx, spec, bc_value=1.0, iterations=kernel_iters,
-                              block_x=32)
-    sec = time_callable(f_k, x, warmup=1, iters=1)
+    p_k = make_plan(spec, GRID, backend="pallas", bc=1.0, iters=kernel_iters)
+    sec = time_callable(p_k, x, warmup=1, iters=1)
     perf = DeliveredPerf(n * steps, encoding_flops_per_point(spec, "direct"),
                          13, kernel_iters, sec)
     rows.append(csv_row("fig6/pallas-direct(interp)", sec,

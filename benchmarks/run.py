@@ -1,13 +1,26 @@
 """Benchmark runner — one section per paper table/figure plus the roofline.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and (with ``--json``) writes a
+machine-readable name -> us_per_call map so the perf trajectory is trackable
+across commits.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only table1_2d ...]
+                                          [--json BENCH_stencil.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+
+# --only accepts either the section key or the benchmark module name.
+_ALIASES = {
+    "table1_2d": "table1",
+    "fig5_shapes": "fig5",
+    "fig6_3d": "fig6",
+    "stencil_fuse_sweep": "stencil-fuse",
+}
 
 
 def main() -> int:
@@ -15,7 +28,10 @@ def main() -> int:
     ap.add_argument("--fast", action="store_true",
                     help="smaller step counts (CI)")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write {row name: us_per_call} JSON")
     args = ap.parse_args()
+    only = ({_ALIASES.get(o, o) for o in args.only} if args.only else None)
 
     from benchmarks import (fig5_shapes, fig6_3d, roofline,
                             stencil_fuse_sweep, table1_2d)
@@ -29,17 +45,39 @@ def main() -> int:
         "roofline": roofline.run,
     }
     failed = 0
+    if only:
+        unknown = only - sections.keys()
+        if unknown:
+            print(f"# unknown --only section(s) {sorted(unknown)}; known: "
+                  f"{sorted(sections) + sorted(_ALIASES)}", file=sys.stderr)
+            failed += len(unknown)
+    results: dict[str, float] = {}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
-        if args.only and name not in args.only:
+        if only and name not in only:
             continue
         try:
             for row in fn():
                 print(row, flush=True)
+                parts = row.split(",")
+                if len(parts) >= 2:
+                    try:
+                        us = float(parts[1])
+                    except ValueError:
+                        continue
+                    if us > 0.0:
+                        # Analytic rows (memory models, roofline bounds)
+                        # print a literal 0.0 — not timings, keep them out
+                        # of the perf-trajectory artifact.
+                        results[parts[0]] = us
         except Exception:
             failed += 1
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"# wrote {len(results)} rows to {args.json}", file=sys.stderr)
     return 1 if failed else 0
 
 

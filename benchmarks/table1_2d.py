@@ -1,31 +1,29 @@
 """Paper Table 1: delivered performance for 2D Jacobi (X=Y=64), dense vs
 convolution encodings, fp32 vs bf16 ("mixed") precision.
 
-The paper streams 500k step-tiles to reach a 2048M-element problem; here the
-per-step throughput is measured over a configurable number of steps and the
-delivered-performance metric (Eq. 1) reports GFLOPS from the analytic
-per-encoding FLOP counts (7 useful / 17 conv / 8191 dense per element).
+All encodings dispatch through the unified ``make_plan`` API
+(core/plan.py), so this benchmark exercises exactly the code path users
+call; each plan does its one-time work (dense-matrix build, jit) outside the
+timed region.  The delivered-performance metric (Eq. 1) reports GFLOPS from
+the analytic per-encoding FLOP counts (7 useful / 17 conv / 8191 dense per
+element).
 
 Also reproduces the dense path's iteration-memory analysis: one N² layer per
 iteration limited the CS-1 to 7 iterations (paper §4).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    DirichletBC,
+    BoundaryMode,
     DeliveredPerf,
-    build_dense_matrix,
-    conv_jacobi_2d,
-    dense_jacobi,
     dense_layer_bytes,
     encoding_flops_per_point,
     laplace_jacobi,
+    make_plan,
 )
-from repro.kernels import jacobi2d
 
 from benchmarks.common import csv_row, time_callable
 
@@ -33,7 +31,6 @@ from benchmarks.common import csv_row, time_callable
 def run(steps: int = 8, iters_dense: int = 7, iters_conv: int = 100,
         grid=(64, 64), kernel_steps: int = 4, kernel_iters: int = 10):
     spec = laplace_jacobi(2)
-    bc = DirichletBC(1.0)
     n = grid[0] * grid[1]
     rng = np.random.default_rng(0)
     rows = []
@@ -42,10 +39,10 @@ def run(steps: int = 8, iters_dense: int = 7, iters_conv: int = 100,
         x = jnp.asarray(rng.standard_normal((steps, *grid)), dtype)
 
         # dense encoding (Algorithm 1): 7 iterations (the CS-1 limit)
-        m = jnp.asarray(build_dense_matrix(grid, spec), dtype)
-        xb = jax.vmap(bc.set_boundary)(x)
-        f_dense = jax.jit(lambda xx: dense_jacobi(xx, m, iters_dense))
-        sec = time_callable(f_dense, xb)
+        p_dense = make_plan(spec, grid, backend="dense", bc=1.0,
+                            mode=BoundaryMode.MATRIX, iters=iters_dense,
+                            dtype=dtype)
+        sec = time_callable(p_dense, x)
         perf = DeliveredPerf(n * steps, encoding_flops_per_point(spec, "dense", n),
                              7, iters_dense, sec)
         rows.append(csv_row(f"table1/dense/{label}", sec,
@@ -53,20 +50,33 @@ def run(steps: int = 8, iters_dense: int = 7, iters_conv: int = 100,
                             f"{perf.useful_gflops:.3f} useful | waste x{perf.waste_ratio:.0f}"))
 
         # convolution encoding (Algorithm 2), mask-trick BCs
-        f_conv = jax.jit(lambda xx: conv_jacobi_2d(xx, spec, bc, iters_conv,
-                                                   dtype=dtype))
-        sec = time_callable(f_conv, x)
+        p_conv = make_plan(spec, grid, backend="conv", bc=1.0,
+                           mode=BoundaryMode.MASK, iters=iters_conv,
+                           dtype=dtype)
+        sec = time_callable(p_conv, x)
         perf = DeliveredPerf(n * steps, encoding_flops_per_point(spec, "conv"),
                              7, iters_conv, sec)
         rows.append(csv_row(f"table1/conv/{label}", sec,
                             f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
                             f"{perf.useful_gflops:.3f} useful | waste x{perf.waste_ratio:.1f}"))
 
+    # what backend="auto"'s cost model picks for this cell on this host
+    p_auto = make_plan(spec, grid, backend="auto", bc=1.0, iters=iters_conv)
+    x = jnp.asarray(rng.standard_normal((steps, *grid)), jnp.float32)
+    sec = time_callable(p_auto, x)
+    perf = DeliveredPerf(n * steps,
+                         encoding_flops_per_point(
+                             spec, "conv" if p_auto.backend.startswith("conv")
+                             else "direct"),
+                         7, iters_conv, sec)
+    rows.append(csv_row(f"table1/auto={p_auto.backend}/fp32", sec,
+                        f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
+                        f"cost-model pick"))
+
     # direct Pallas stencil (TPU-native re-think; interpret mode on CPU)
     x = jnp.asarray(rng.standard_normal((kernel_steps, *grid)), jnp.float32)
-    f_k = lambda xx: jacobi2d(xx, spec, bc_value=1.0, iterations=kernel_iters,
-                              block_h=64)
-    sec = time_callable(f_k, x, warmup=1, iters=1)
+    p_k = make_plan(spec, grid, backend="pallas", bc=1.0, iters=kernel_iters)
+    sec = time_callable(p_k, x, warmup=1, iters=1)
     perf = DeliveredPerf(n * kernel_steps,
                          encoding_flops_per_point(spec, "direct"), 7,
                          kernel_iters, sec)

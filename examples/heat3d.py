@@ -19,12 +19,10 @@ import numpy as np
 
 from repro.core import (
     DirichletBC,
-    conv_jacobi_3d_channels,
-    conv_jacobi_3d_native,
     jacobi_reference,
     laplace_jacobi,
+    stencil_apply,
 )
-from repro.kernels import jacobi3d
 
 
 def main():
@@ -43,13 +41,18 @@ def main():
     print(f"== 3D heat, grid (Z,X,Y)={grid}, walls at {bc_value} ==")
     ref = jnp.stack([jacobi_reference(x0[0], spec, bc, args.iters)])
 
-    ch = conv_jacobi_3d_channels(x0, spec, bc, args.iters)
-    nat = conv_jacobi_3d_native(x0, spec, bc, args.iters)
-    ker = jacobi3d(x0, spec, bc_value=bc_value, iterations=args.iters,
-                   block_x=32)
+    # One spec, three encodings — all through the unified dispatcher.
+    ch = stencil_apply(spec, x0, backend="conv", bc=bc_value, iters=args.iters)
+    nat = stencil_apply(spec, x0, backend="conv3d_native", bc=bc_value,
+                        iters=args.iters)
+    ker = stencil_apply(spec, x0, backend="pallas", bc=bc_value,
+                        iters=args.iters)
+    auto = stencil_apply(spec, x0, backend="auto", bc=bc_value,
+                         iters=args.iters)
     print(f"channels-trick  err={float(jnp.abs(ch - ref).max()):.2e}")
     print(f"native conv3d   err={float(jnp.abs(nat - ref).max()):.2e}")
     print(f"pallas direct   err={float(jnp.abs(ker - ref).max()):.2e}")
+    print(f"auto            err={float(jnp.abs(auto - ref).max()):.2e}")
     centre = ch[0, grid[0] // 2, grid[1] // 2, grid[2] // 2]
     print(f"centre temperature after {args.iters} iters: {float(centre):.3f} "
           f"(walls {bc_value}) — heat diffusing inward ✓")
@@ -59,15 +62,12 @@ def main():
         if n < 2:
             print("(--distributed skipped: single device)")
             return
-        from repro.core.distributed import make_distributed_jacobi
         # distribute the 2D X-Y plane of the mid-Z slice problem
         mesh = jax.make_mesh((2, n // 2), ("data", "model"))
         spec2 = laplace_jacobi(2)
-        run = make_distributed_jacobi(mesh, spec2, H=64, W=64,
-                                      bc_value=bc_value,
-                                      iterations=args.iters)
         x2 = jnp.zeros((2, 64, 64), jnp.float32)
-        out = run(x2)
+        out = stencil_apply(spec2, x2, backend="halo", bc=bc_value,
+                            iters=args.iters, mesh=mesh)
         ref2 = jnp.stack([jacobi_reference(x2[i], spec2, DirichletBC(bc_value),
                                            args.iters) for i in range(2)])
         print(f"distributed halo-exchange (mesh {dict(mesh.shape)}) "

@@ -1,13 +1,14 @@
-"""Quickstart: the paper's 2D Jacobi benchmark through every encoding.
+"""Quickstart: the paper's 2D Jacobi benchmark through every encoding, all
+dispatched through the unified ``stencil_apply`` / ``make_plan`` API.
 
   PYTHONPATH=src python examples/quickstart.py
 
 Builds a 64x64 Laplace problem with Dirichlet BC = 1.0 (paper Table 1 shape),
-solves it with (a) the dense-layer encoding, (b) the convolution encoding
+lowers it through (a) the dense-layer encoding, (b) the convolution encoding
 with the mask trick, (c) the direct Pallas stencil kernel, (d) the
-temporally-blocked fused kernel — and cross-validates that all four agree
-with the reference oracle, then reports the paper's delivered-performance
-metric for each.
+temporally-blocked fused kernel, (e) whatever the auto cost model picks —
+cross-validates that all agree with the reference oracle, then reports the
+paper's delivered-performance metric for each.
 """
 import os
 import sys
@@ -23,13 +24,11 @@ from repro.core import (
     BoundaryMode,
     DeliveredPerf,
     DirichletBC,
-    conv_jacobi_2d,
-    dense_jacobi_with_bc,
     encoding_flops_per_point,
     jacobi_reference,
     laplace_jacobi,
+    make_plan,
 )
-from repro.kernels import jacobi2d
 from benchmarks.common import time_callable
 
 
@@ -46,31 +45,36 @@ def main():
     ref = jnp.stack([jacobi_reference(x0[i], spec, bc, iters)
                      for i in range(steps)])
 
-    runs = {
-        "dense-layer (Alg 1)": lambda: dense_jacobi_with_bc(x0, spec, bc, iters),
-        "conv-layer (Alg 2, mask trick)": lambda: conv_jacobi_2d(
-            x0, spec, bc, iters, BoundaryMode.MASK),
-        "conv-layer (pad mode)": lambda: conv_jacobi_2d(
-            x0, spec, bc, iters, BoundaryMode.PAD),
-        "pallas direct": lambda: jacobi2d(x0, spec, bc_value=1.0,
-                                          iterations=iters, block_h=64),
-        "pallas fused T=4": lambda: jacobi2d(x0, spec, bc_value=1.0,
-                                             iterations=iters, fuse=4,
-                                             block_h=64),
+    plans = {
+        "dense-layer (Alg 1)": make_plan(
+            spec, grid, backend="dense", bc=1.0, mode=BoundaryMode.MATRIX,
+            iters=iters),
+        "conv-layer (Alg 2, mask trick)": make_plan(
+            spec, grid, backend="conv", bc=1.0, mode=BoundaryMode.MASK,
+            iters=iters),
+        "conv-layer (pad mode)": make_plan(
+            spec, grid, backend="conv", bc=1.0, mode=BoundaryMode.PAD,
+            iters=iters),
+        "pallas direct": make_plan(
+            spec, grid, backend="pallas", bc=1.0, iters=iters),
+        "pallas fused T=4": make_plan(
+            spec, grid, backend="pallas_fused", bc=1.0, iters=iters, fuse=4),
     }
-    flops = {
-        "dense-layer (Alg 1)": encoding_flops_per_point(spec, "dense", 4096),
-        "conv-layer (Alg 2, mask trick)": encoding_flops_per_point(spec, "conv"),
-        "conv-layer (pad mode)": encoding_flops_per_point(spec, "conv"),
-        "pallas direct": encoding_flops_per_point(spec, "direct"),
-        "pallas fused T=4": encoding_flops_per_point(spec, "direct"),
-    }
+    auto = make_plan(spec, grid, backend="auto", bc=1.0, iters=iters)
+    plans[f"auto -> {auto.backend}"] = auto
+
     n = grid[0] * grid[1]
-    for name, fn in runs.items():
-        out = fn()
+    for name, plan in plans.items():
+        if plan.backend == "dense":
+            flops = encoding_flops_per_point(spec, "dense", n_total=n)
+        elif plan.backend in ("conv", "conv3d_native"):
+            flops = encoding_flops_per_point(spec, "conv")
+        else:
+            flops = encoding_flops_per_point(spec, "direct")
+        out = plan(x0)
         err = float(jnp.abs(out - ref).max())
-        sec = time_callable(lambda: fn(), warmup=1, iters=1)
-        perf = DeliveredPerf(n * steps, flops[name], 7, iters, sec)
+        sec = time_callable(plan, x0, warmup=1, iters=1)
+        perf = DeliveredPerf(n * steps, flops, 7, iters, sec)
         print(f"{name:32s} max|err|={err:.2e}  "
               f"delivered={perf.delivered_gflops:8.3f} GFLOPS  "
               f"useful={perf.useful_gflops:7.3f}  waste x{perf.waste_ratio:.1f}")

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + the fast stencil benchmark with a
+# machine-readable perf artifact (BENCH_stencil.json) for trajectory tracking.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== stencil benchmark (fast) =="
+python -m benchmarks.run --fast --only table1_2d --json BENCH_stencil.json

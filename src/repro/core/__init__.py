@@ -2,6 +2,14 @@
 tensor-program primitives (dense layers, convolutions) plus the TPU-native
 re-think (direct Pallas stencils, temporal blocking, halo-exchange
 distribution).  See DESIGN.md §1-2.
+
+The single entry point is the dispatcher in ``plan.py``:
+``stencil_apply(spec, x, backend="auto", ...)`` routes one ``StencilSpec``
+through any backend (reference oracle, dense, conv, direct Pallas,
+temporally-fused Pallas, sharded halo exchange), choosing via a small cost
+model when ``backend="auto"``; ``make_plan`` prepares a reusable executor and
+``backend_support`` reports which backends are legal for a given cell.  Every
+backend is cross-validated against the oracle in tests/conformance/.
 """
 from repro.core.boundary import BoundaryMode, DirichletBC
 from repro.core.conv1d import causal_conv1d, causal_conv1d_update
@@ -20,6 +28,15 @@ from repro.core.dense_encoding import (
     dense_layer_bytes,
 )
 from repro.core.metrics import DeliveredPerf, encoding_flops_per_point
+from repro.core.plan import (
+    BACKENDS,
+    BackendSupport,
+    StencilPlan,
+    backend_support,
+    choose_backend,
+    make_plan,
+    stencil_apply,
+)
 from repro.core.reference import apply_stencil, jacobi_reference, jacobi_step
 from repro.core.stencil import (
     StencilSpec,
@@ -30,10 +47,17 @@ from repro.core.stencil import (
 )
 
 __all__ = [
+    "BACKENDS",
+    "BackendSupport",
     "BoundaryMode",
     "DirichletBC",
+    "StencilPlan",
     "StencilSpec",
     "apply_stencil",
+    "backend_support",
+    "choose_backend",
+    "make_plan",
+    "stencil_apply",
     "box",
     "build_dense_matrix",
     "causal_conv1d",

@@ -52,6 +52,11 @@ def build_dense_matrix(
             continue
         for off, weight in spec.taps:
             nbr = np.array(idx) + np.array(off)
+            if np.any(nbr < 0) or np.any(nbr >= np.array(grid_shape)):
+                # Radius > 1: taps can reach past the grid even from interior
+                # cells; zero-pad semantics means they contribute nothing
+                # (without this check a negative index silently wraps).
+                continue
             flat_j = int(np.dot(nbr, strides))
             w[flat_j, flat_i] += weight  # column = output, row = input (x @ W)
     return w

@@ -26,7 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.boundary import DirichletBC
 from repro.core.stencil import StencilSpec
-from repro.parallel.halo import exchange_halo_2d
+from repro.parallel.halo import exchange_halo_2d, shard_map_compat
 
 
 def _local_step(xp, spec, r, bc_value, grows, gcols, H, W):
@@ -74,10 +74,7 @@ def make_distributed_jacobi(mesh, spec: StencilSpec, *, H: int, W: int,
         return y
 
     in_spec = P(batch_axis, row_axis, col_axis)
-    fn = jax.shard_map(
-        local_fn, mesh=mesh, in_specs=(in_spec,), out_specs=in_spec,
-        check_vma=False,
-    )
+    fn = shard_map_compat(local_fn, mesh, (in_spec,), in_spec)
 
     def run(x0):
         bc = DirichletBC(bc_value)

@@ -1,0 +1,521 @@
+"""Unified stencil dispatch — one spec, every encoding, one entry point.
+
+``stencil.py`` promises that "every backend computes the same operator and can
+be cross-validated"; this module is where that promise becomes an API.  A
+``StencilSpec`` + grid shape + boundary condition can be lowered through any
+of the repo's executable encodings:
+
+  reference     pure-jnp shifted-add oracle           (core/reference.py)
+  dense         N×N dense-layer matmul, BCs in-matrix (core/dense_encoding.py)
+  conv          conv layer; 3D rides Conv2D channels  (core/conv_encoding.py)
+  conv3d_native true Conv3D (what the CS-1 lacked)    (core/conv_encoding.py)
+  pallas        direct Pallas stencil kernel          (kernels/stencil{2,3}d.py)
+  pallas_fused  temporally-blocked Pallas kernel      (kernels/jacobi_fused.py)
+  halo          shard_map halo-exchange distribution  (parallel/halo.py)
+
+``backend="auto"`` picks via a small analytic cost model: per-point FLOPs for
+the encoding (core/metrics.py), bytes streamed per iteration, the device
+kind's vector/matmul throughput and memory bandwidth, and the arithmetic-
+intensity boost temporal fusion buys.  ``backend_support`` answers *which
+backends are legal* for a given (spec, grid, boundary mode, device) cell —
+the conformance matrix in tests/conformance/ walks every cell and either
+cross-validates it against the oracle or records the reason it is skipped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.boundary import BoundaryMode, DirichletBC
+from repro.core.metrics import encoding_flops_per_point
+from repro.core.reference import apply_stencil, jacobi_reference
+from repro.core.stencil import StencilSpec
+
+BACKENDS = (
+    "reference",
+    "dense",
+    "conv",
+    "conv3d_native",
+    "pallas",
+    "pallas_fused",
+    "halo",
+)
+
+
+# ---------------------------------------------------------------------------
+# Support matrix
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BackendSupport:
+    """Whether a backend can execute a cell, and if not, why not."""
+
+    ok: bool
+    reason: str = ""
+
+    def __bool__(self) -> bool:
+        return self.ok
+
+
+def _no(reason: str) -> BackendSupport:
+    return BackendSupport(False, reason)
+
+
+_OK = BackendSupport(True)
+
+
+def backend_support(
+    backend: str,
+    spec: StencilSpec,
+    *,
+    grid_shape: tuple[int, ...] | None = None,
+    mode: BoundaryMode = BoundaryMode.MASK,
+    bc: DirichletBC | float | None = 0.0,
+    mesh=None,
+) -> BackendSupport:
+    """Is ``backend`` legal for this (spec, grid, mode, bc) cell?
+
+    Returns a BackendSupport whose ``reason`` string is suitable for a test
+    skip message — the conformance matrix relies on this being exhaustive.
+    """
+    if backend not in BACKENDS:
+        return _no(f"unknown backend {backend!r} (known: {BACKENDS})")
+    nd = spec.ndim
+    raw = bc is None
+    scalar_bc = raw or isinstance(bc, (int, float)) or (
+        isinstance(bc, DirichletBC) and isinstance(bc.value, (int, float))
+    )
+
+    if backend == "reference":
+        return _OK  # the oracle runs everywhere; mode is a no-op for it
+
+    if backend == "dense":
+        if raw:
+            return _no("dense encoding folds BCs into identity matrix rows; "
+                       "raw (bc=None) zero-pad semantics not expressible")
+        if mode is not BoundaryMode.MATRIX:
+            return _no("dense encoding applies BCs as identity matrix rows "
+                       "(BoundaryMode.MATRIX only)")
+        return _OK
+
+    if backend == "conv":
+        if nd == 1:
+            return _no("no 1D conv encoding (use dense or reference)")
+        if nd == 3 and mode is not BoundaryMode.MASK:
+            return _no("3D channels-trick conv supports the mask trick only")
+        if raw:
+            return _no("conv encoding paths bake in the Dirichlet fixup")
+        if mode is BoundaryMode.MATRIX:
+            return _no("MATRIX mode is the dense encoding's BC scheme")
+        if mode is BoundaryMode.PAD and spec.radius != 1:
+            return _no("BoundaryMode.PAD reconstructs the shell only for "
+                       "radius-1 stencils")
+        return _OK
+
+    if backend == "conv3d_native":
+        if nd != 3:
+            return _no("conv3d_native is the 3D-only Conv3D path")
+        if raw:
+            return _no("conv encoding paths bake in the Dirichlet fixup")
+        if mode is not BoundaryMode.MASK:
+            return _no("conv3d_native supports the mask trick only")
+        return _OK
+
+    if backend in ("pallas", "pallas_fused"):
+        if backend == "pallas_fused" and nd != 2:
+            return _no("temporal fusion kernel is 2D only (jacobi_fused.py)")
+        if nd not in (2, 3):
+            return _no(f"no {nd}D Pallas kernel (stencil2d/stencil3d only)")
+        if not raw and mode is not BoundaryMode.MASK:
+            return _no("Pallas kernels fuse the mask trick in-kernel "
+                       "(BoundaryMode.MASK only)")
+        if not scalar_bc:
+            return _no("Pallas kernels pin the shell to a scalar bc_value; "
+                       "array-valued DirichletBC unsupported")
+        return _OK
+
+    if backend == "halo":
+        if nd != 2:
+            return _no("halo-exchange distribution is 2D (distributed.py)")
+        if raw:
+            return _no("distributed jacobi bakes in the Dirichlet fixup")
+        if mode is not BoundaryMode.MASK:
+            return _no("distributed jacobi applies BCs via the mask trick")
+        if not scalar_bc:
+            return _no("distributed jacobi needs a scalar bc_value")
+        tiling = _mesh_tiling(mesh)
+        if tiling is None:
+            return _no("halo distribution needs a mesh with >= 2 axes "
+                       "(rows x cols)")
+        if grid_shape is not None:
+            n_row, n_col = tiling
+            if grid_shape[0] % n_row or grid_shape[1] % n_col:
+                return _no(f"grid {grid_shape} does not tile over the "
+                           f"{n_row}x{n_col} device mesh")
+        return _OK
+
+    raise AssertionError(backend)
+
+
+def _mesh_tiling(mesh) -> tuple[int, int] | None:
+    """(n_row, n_col) of the first two mesh axes; None if the mesh can't
+    host a 2D tile decomposition."""
+    if mesh is None:
+        return 1, 1
+    names = mesh.axis_names
+    if len(names) < 2:
+        return None
+    return mesh.shape[names[0]], mesh.shape[names[1]]
+
+
+# ---------------------------------------------------------------------------
+# Cost model for backend="auto"
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Coarse per-device-kind rates the auto cost model prices against."""
+
+    kind: str
+    vector_flops: float   # elementwise / VPU FLOP/s
+    matmul_flops: float   # MXU / GEMM FLOP/s
+    mem_bw: float         # HBM / DRAM bytes/s
+    pallas_native: bool   # False => Pallas runs in interpret mode
+
+
+DEVICE_PROFILES = {
+    # One CPU core; Pallas falls back to the (slow) interpreter.
+    "cpu": DeviceProfile("cpu", 5e10, 2e11, 5e10, pallas_native=False),
+    "gpu": DeviceProfile("gpu", 2e13, 1.5e14, 2e12, pallas_native=True),
+    # v5e-class: the ~240 FLOP/byte ridge the kernel docstrings cite.
+    "tpu": DeviceProfile("tpu", 4e12, 2e14, 8e11, pallas_native=True),
+}
+
+# Interpret-mode Pallas re-traces every lane op in Python — orders of
+# magnitude off; the model only needs it to never win on CPU.
+_INTERPRET_PENALTY = 1e4
+
+
+def _resolve_fuse(iters: int) -> int:
+    """The fuse depth pallas_fused actually runs at for ``iters`` (the same
+    rule make_plan applies) — the cost model must price this, not a phantom
+    deeper fusion."""
+    return next((f for f in (8, 4, 2) if iters % f == 0), 1)
+
+
+def estimate_seconds(
+    backend: str,
+    spec: StencilSpec,
+    grid_shape: tuple[int, ...],
+    iters: int,
+    device: DeviceProfile,
+    *,
+    itemsize: int = 4,
+) -> float:
+    """Roofline-style time estimate for ``iters`` applications on one step.
+
+    time = max(compute, memory) per iteration; temporal fusion divides the
+    streamed bytes by the fuse depth (the whole point of jacobi_fused.py).
+    """
+    n = int(np.prod(grid_shape))
+    stream = 2 * n * itemsize  # read + write the grid once per iteration
+
+    if backend == "dense":
+        flops = encoding_flops_per_point(spec, "dense", n_total=n)
+        compute = flops * n / device.matmul_flops
+        mem = (n * n * itemsize + stream) / device.mem_bw  # matrix re-streams
+    elif backend in ("conv", "conv3d_native"):
+        if spec.ndim == 3 and backend == "conv":
+            flops = encoding_flops_per_point(spec, "conv3d_channels",
+                                             n_total=grid_shape[0])
+        else:
+            flops = encoding_flops_per_point(spec, "conv")
+        compute = flops * n / device.vector_flops
+        mem = stream / device.mem_bw
+    else:  # reference / pallas / pallas_fused / halo: direct shifted adds
+        flops = encoding_flops_per_point(spec, "direct")
+        compute = flops * n / device.vector_flops
+        mem = stream / device.mem_bw
+        if backend == "pallas_fused":
+            mem /= _resolve_fuse(iters)  # fuse-depth fewer HBM round-trips
+
+    per_iter = max(compute, mem)
+    total = per_iter * iters
+    if backend in ("pallas", "pallas_fused") and not device.pallas_native:
+        total *= _INTERPRET_PENALTY
+    if backend == "halo":
+        total += 1e-5 * iters  # per-iteration ppermute latency floor
+    return total
+
+
+def choose_backend(
+    spec: StencilSpec,
+    grid_shape: tuple[int, ...],
+    *,
+    mode: BoundaryMode = BoundaryMode.MASK,
+    bc: DirichletBC | float | None = 0.0,
+    iters: int = 1,
+    device_kind: str | None = None,
+    mesh=None,
+) -> tuple[str, dict[str, float]]:
+    """Pick the cheapest supported backend; returns (name, cost table).
+
+    Two backends are special-cased: ``halo`` is a *distribution strategy*,
+    not a local encoding, so it is only considered when a mesh is explicitly
+    supplied; ``reference`` is the cross-validation oracle, so auto only
+    falls back to it when no real encoding supports the cell (otherwise
+    "auto matches the oracle" would be circular).
+    """
+    if device_kind is None:
+        device_kind = jax.default_backend()
+    device = DEVICE_PROFILES.get(device_kind, DEVICE_PROFILES["cpu"])
+
+    costs: dict[str, float] = {}
+    for b in BACKENDS:
+        if b == "halo" and mesh is None:
+            continue
+        if b == "reference":
+            continue
+        if not backend_support(b, spec, grid_shape=grid_shape, mode=mode,
+                               bc=bc, mesh=mesh):
+            continue
+        costs[b] = estimate_seconds(b, spec, grid_shape, iters, device)
+    if not costs:
+        # Oracle fallback: always legal, never preferred.
+        costs["reference"] = estimate_seconds("reference", spec, grid_shape,
+                                              iters, device)
+    best = min(costs, key=costs.__getitem__)
+    return best, costs
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StencilPlan:
+    """A prepared (batch, *grid) -> (batch, *grid) stencil executor.
+
+    ``make_plan`` does the one-time work (backend choice, dense-matrix
+    materialization, distributed-solver tracing) so repeated calls — the
+    benchmark loops — pay only the jitted execution.
+    """
+
+    spec: StencilSpec
+    backend: str
+    grid_shape: tuple[int, ...]
+    mode: BoundaryMode
+    iters: int
+    fuse: int
+    costs: dict[str, float]
+    _fn: Callable[[jnp.ndarray], jnp.ndarray]
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        squeeze = x.ndim == self.spec.ndim
+        if squeeze:
+            x = x[None]
+        if x.shape[1:] != self.grid_shape:
+            raise ValueError(
+                f"plan built for grid {self.grid_shape}, got {x.shape[1:]}")
+        out = self._fn(x)
+        return out[0] if squeeze else out
+
+
+def _as_bc(bc: DirichletBC | float | None) -> DirichletBC | None:
+    if bc is None or isinstance(bc, DirichletBC):
+        return bc
+    return DirichletBC(float(bc))
+
+
+def _scalar_bc_value(bc: DirichletBC | None) -> float | None:
+    if bc is None:
+        return None
+    if not isinstance(bc.value, (int, float)):
+        raise ValueError("this backend needs a scalar Dirichlet value")
+    return float(bc.value)
+
+
+def _raw_reference(x, spec, iters):
+    def one(g):
+        for _ in range(iters):
+            g = apply_stencil(g, spec)
+        return g
+    return jax.vmap(one)(x)
+
+
+def make_plan(
+    spec: StencilSpec,
+    grid_shape: tuple[int, ...],
+    *,
+    backend: str = "auto",
+    bc: DirichletBC | float | None = 0.0,
+    mode: BoundaryMode = BoundaryMode.MASK,
+    iters: int = 1,
+    fuse: int | None = None,
+    dtype=jnp.float32,
+    mesh=None,
+    interpret: bool | None = None,
+    device_kind: str | None = None,
+) -> StencilPlan:
+    """Lower ``spec`` on ``grid_shape`` through one backend into a callable.
+
+    backend="auto" routes through :func:`choose_backend`.  ``bc=None`` means
+    raw zero-padded stencil application (no Dirichlet fixup) — only the
+    reference and Pallas backends can express it.
+    """
+    if spec.ndim != len(grid_shape):
+        raise ValueError(f"spec is {spec.ndim}D but grid is {len(grid_shape)}D")
+    if iters < 1:
+        raise ValueError("iters must be >= 1")
+    bc = _as_bc(bc)
+
+    costs: dict[str, float] = {}
+    if backend == "auto":
+        backend, costs = choose_backend(
+            spec, grid_shape, mode=mode, bc=bc, iters=iters,
+            device_kind=device_kind, mesh=mesh)
+    sup = backend_support(backend, spec, grid_shape=grid_shape, mode=mode,
+                          bc=bc, mesh=mesh)
+    if not sup:
+        raise ValueError(f"backend {backend!r} unsupported here: {sup.reason}")
+
+    # ``fuse`` is a hint for the 2D Pallas paths (both scalar-bc and raw
+    # execute in fuse-sized chunks); every other backend ignores it and the
+    # plan records fuse=1 so its metadata reflects what actually runs.
+    fusing = backend == "pallas_fused" or (backend == "pallas"
+                                           and spec.ndim == 2)
+    if not fusing:
+        fuse = 1
+    elif fuse is None:
+        fuse = _resolve_fuse(iters) if backend == "pallas_fused" else 1
+    elif iters % fuse:
+        raise ValueError(f"iters={iters} not divisible by fuse={fuse}")
+
+    fn = _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype,
+                   mesh, interpret)
+    if backend != "halo":
+        # One jit over the whole closure: the per-call preamble (conv-kernel
+        # build, set_boundary, mask/bc grids) traces into constants, so
+        # repeated plan calls pay only compiled execution.  The halo path is
+        # already a jitted shard_map program.
+        fn = jax.jit(fn)
+    return StencilPlan(spec=spec, backend=backend, grid_shape=grid_shape,
+                       mode=mode, iters=iters, fuse=fuse, costs=costs, _fn=fn)
+
+
+def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
+              interpret):
+    """One closure per backend; all share (batch, *grid) -> same semantics."""
+    # Imports deferred so importing repro.core never drags in the Pallas /
+    # shard_map machinery for users who only want the specs.
+    if backend == "reference":
+        if bc is None:
+            return lambda x: _raw_reference(x.astype(dtype), spec, iters)
+        return lambda x: jax.vmap(
+            lambda g: jacobi_reference(g, spec, bc, iters))(x.astype(dtype))
+
+    if backend == "dense":
+        from repro.core.dense_encoding import build_dense_matrix, dense_jacobi
+        matrix = jnp.asarray(build_dense_matrix(grid_shape, spec), dtype)
+
+        def run_dense(x):
+            x = jax.vmap(bc.set_boundary)(x.astype(dtype))
+            return dense_jacobi(x, matrix, iters)
+        return run_dense
+
+    if backend == "conv":
+        from repro.core.conv_encoding import (conv_jacobi_2d,
+                                              conv_jacobi_3d_channels)
+        if spec.ndim == 2:
+            return lambda x: conv_jacobi_2d(x, spec, bc, iters, mode,
+                                            dtype=dtype)
+        return lambda x: conv_jacobi_3d_channels(x, spec, bc, iters,
+                                                 dtype=dtype)
+
+    if backend == "conv3d_native":
+        from repro.core.conv_encoding import conv_jacobi_3d_native
+        return lambda x: conv_jacobi_3d_native(x, spec, bc, iters, dtype=dtype)
+
+    if backend in ("pallas", "pallas_fused"):
+        bc_value = _scalar_bc_value(bc)
+        if spec.ndim == 3:
+            from repro.kernels import jacobi3d, stencil3d
+            if bc_value is not None:
+                return lambda x: jacobi3d(x.astype(dtype), spec,
+                                          bc_value=bc_value, iterations=iters,
+                                          interpret=interpret)
+
+            def run_raw3d(x):
+                x = x.astype(dtype)
+                for _ in range(iters):
+                    x = stencil3d(x, spec, interpret=interpret)
+                return x
+            return run_raw3d
+
+        if bc_value is not None:
+            from repro.kernels import jacobi2d
+            return lambda x: jacobi2d(x.astype(dtype), spec, bc_value=bc_value,
+                                      iterations=iters, fuse=fuse,
+                                      interpret=interpret)
+        from repro.kernels import jacobi2d_fused_step
+
+        def run_raw2d(x):
+            x = x.astype(dtype)
+            for _ in range(iters // fuse):
+                x = jacobi2d_fused_step(x, spec, fuse=fuse,
+                                        interpret=interpret)
+            return x
+        return run_raw2d
+
+    if backend == "halo":
+        from repro.core.distributed import make_distributed_jacobi
+        bc_value = _scalar_bc_value(bc)
+        if mesh is None:
+            mesh = jax.make_mesh((1, 1), ("halo_row", "halo_col"))
+        row_axis, col_axis = mesh.axis_names[0], mesh.axis_names[1]
+        run = make_distributed_jacobi(
+            mesh, spec, H=grid_shape[0], W=grid_shape[1], bc_value=bc_value,
+            iterations=iters, row_axis=row_axis, col_axis=col_axis)
+        return lambda x: run(x.astype(dtype))
+
+    raise AssertionError(backend)
+
+
+# ---------------------------------------------------------------------------
+# One-shot convenience
+# ---------------------------------------------------------------------------
+
+def stencil_apply(
+    spec: StencilSpec,
+    x: jnp.ndarray,
+    *,
+    backend: str = "auto",
+    bc: DirichletBC | float | None = 0.0,
+    mode: BoundaryMode = BoundaryMode.MASK,
+    iters: int = 1,
+    fuse: int | None = None,
+    mesh=None,
+    interpret: bool | None = None,
+    device_kind: str | None = None,
+) -> jnp.ndarray:
+    """Apply ``iters`` stencil steps to ``x`` through any backend.
+
+    ``x`` is (batch, *grid) or bare (*grid).  Semantics match
+    ``jacobi_reference``: the Dirichlet shell is seeded, then each iteration
+    applies the stencil and re-pins the shell (``bc=None`` skips both and
+    iterates the raw zero-padded operator).  Every backend is cross-validated
+    against the oracle in tests/conformance/.
+    """
+    if x.ndim not in (spec.ndim, spec.ndim + 1):
+        raise ValueError(
+            f"x.ndim={x.ndim} incompatible with a {spec.ndim}D spec "
+            f"(expect grid or batch+grid)")
+    grid_shape = tuple(x.shape[-spec.ndim:])
+    plan = make_plan(spec, grid_shape, backend=backend, bc=bc, mode=mode,
+                     iters=iters, fuse=fuse, dtype=x.dtype, mesh=mesh,
+                     interpret=interpret, device_kind=device_kind)
+    return plan(x)

@@ -27,7 +27,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.stencil import StencilSpec
-from repro.kernels.stencil2d import _round_up, _shift2d
+from repro.kernels.tiling import halo_block_spec, round_up, shift2d
 
 
 def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, T: int,
@@ -55,7 +55,7 @@ def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, T: int,
     for t in range(T):
         acc = None
         for off, wgt in spec.taps:
-            term = _shift2d(xb, off[0], off[1], r) * np.float32(wgt)
+            term = shift2d(xb, off[0], off[1], r) * np.float32(wgt)
             acc = term if acc is None else acc + term
         row0 += r
         col0 += r
@@ -97,9 +97,9 @@ def jacobi2d_fused_step(
     B, H, W = x.shape
     r = spec.radius
     halo = fuse * r
-    bh = min(block_h, _round_up(H, 8))
-    Hp = _round_up(H, bh)
-    Wp = _round_up(W, 128)
+    bh = min(block_h, round_up(H, 8))
+    Hp = round_up(H, bh)
+    Wp = round_up(W, 128)
     xp = jnp.pad(x, ((0, 0), (0, Hp - H), (0, Wp - W)))
 
     kern = functools.partial(
@@ -109,10 +109,10 @@ def jacobi2d_fused_step(
         kern,
         grid=(B, Hp // bh),
         in_specs=[
-            pl.BlockSpec(
-                (1, pl.Element(bh + 2 * halo, padding=(halo, halo)),
-                 pl.Element(Wp + 2 * halo, padding=(halo, halo))),
+            halo_block_spec(
+                (1, bh + 2 * halo, Wp + 2 * halo),
                 lambda b, i: (b, i * bh, 0),
+                ((0, 0), (halo, halo), (halo, halo)),
             )
         ],
         out_specs=pl.BlockSpec((1, bh, Wp), lambda b, i: (b, i, 0)),

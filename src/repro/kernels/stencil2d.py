@@ -3,8 +3,8 @@ conv encoding (DESIGN §2).
 
 On the WSE the grid lives in per-core SRAM and neighbour taps arrive over the
 fabric.  The TPU analogue: row-tile the grid into VMEM blocks with a
-radius-r halo (overlapping reads via ``pl.Element``), apply the taps as
-*shifted adds* on the VPU, and write back the interior.  A 5-point stencil
+radius-r halo (overlapping element-indexed reads via ``tiling.halo_block_spec``),
+apply the taps as *shifted adds* on the VPU, and write back the interior.  A 5-point stencil
 has no MXU-shaped reuse at C=1 — im2col conv would waste 9/5 of its MACs and
 round-trip through a matmul — so the direct form is the roofline-correct
 choice: arithmetic intensity ≈ 7 FLOP / 8 bytes streamed, i.e. memory-bound,
@@ -24,22 +24,13 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.stencil import StencilSpec
-
-
-def _shift2d(xb: jnp.ndarray, dr: int, dc: int, r: int) -> jnp.ndarray:
-    """Slice the halo block so result[i,j] = xb_interior[i+dr, j+dc].
-
-    xb has r halo rows top/bottom and r halo cols left/right; the output is
-    the (block_h, block_w) interior window displaced by (dr, dc).
-    """
-    h, w = xb.shape
-    return jax.lax.slice(xb, (r + dr, r + dc), (h - r + dr, w - r + dc))
+from repro.kernels.tiling import halo_block_spec, round_up, shift2d
 
 
 def _stencil_block(xb: jnp.ndarray, spec: StencilSpec, r: int) -> jnp.ndarray:
     acc = None
     for off, wgt in spec.taps:
-        term = _shift2d(xb, off[0], off[1], r).astype(jnp.float32) * np.float32(wgt)
+        term = shift2d(xb, off[0], off[1], r).astype(jnp.float32) * np.float32(wgt)
         acc = term if acc is None else acc + term
     return acc
 
@@ -89,9 +80,9 @@ def stencil2d(
         interpret = jax.default_backend() == "cpu"
     B, H, W = x.shape
     r = spec.radius
-    bh = min(block_h, _round_up(H, 8))
-    Hp = _round_up(H, bh)
-    Wp = _round_up(W, 128)
+    bh = min(block_h, round_up(H, 8))
+    Hp = round_up(H, bh)
+    Wp = round_up(W, 128)
     xp = jnp.pad(x, ((0, 0), (0, Hp - H), (0, Wp - W)))
 
     kern = functools.partial(
@@ -101,10 +92,10 @@ def stencil2d(
         kern,
         grid=(B, Hp // bh),
         in_specs=[
-            pl.BlockSpec(
-                (1, pl.Element(bh + 2 * r, padding=(r, r)),
-                 pl.Element(Wp + 2 * r, padding=(r, r))),
+            halo_block_spec(
+                (1, bh + 2 * r, Wp + 2 * r),
                 lambda b, i: (b, i * bh, 0),
+                ((0, 0), (r, r), (r, r)),
             )
         ],
         out_specs=pl.BlockSpec((1, bh, Wp), lambda b, i: (b, i, 0)),
@@ -112,7 +103,3 @@ def stencil2d(
         interpret=interpret,
     )(xp)
     return out[:, :H, :W]
-
-
-def _round_up(v: int, m: int) -> int:
-    return (v + m - 1) // m * m

@@ -2,7 +2,7 @@
 
 The paper could not express 3D natively (no Conv3D on the CS-1) and paid a
 Z²-banded channel matrix instead (Figures 3-4).  On TPU we tile the X
-dimension into VMEM blocks with halo (``pl.Element``); Z and Y stay whole in
+dimension into VMEM blocks with halo (``tiling.halo_block_spec``); Z and Y stay whole in
 the block (Z is small in the paper's workloads — Z=10 — and Y rides the
 128-lane dim).  Z-shifts are in-block with zero fill via concatenation.
 """
@@ -16,7 +16,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.stencil import StencilSpec
-from repro.kernels.stencil2d import _round_up
+from repro.kernels.tiling import halo_block_spec, round_up
 
 
 def _shift3d(xb: jnp.ndarray, dz: int, dx: int, dy: int, r: int) -> jnp.ndarray:
@@ -83,9 +83,9 @@ def stencil3d(
         interpret = jax.default_backend() == "cpu"
     B, Z, X, Y = x.shape
     r = spec.radius
-    bx = min(block_x, _round_up(X, 8))
-    Xp = _round_up(X, bx)
-    Yp = _round_up(Y, 128)
+    bx = min(block_x, round_up(X, 8))
+    Xp = round_up(X, bx)
+    Yp = round_up(Y, 128)
     xp = jnp.pad(x, ((0, 0), (0, 0), (0, Xp - X), (0, Yp - Y)))
 
     kern = functools.partial(
@@ -95,10 +95,10 @@ def stencil3d(
         kern,
         grid=(B, Xp // bx),
         in_specs=[
-            pl.BlockSpec(
-                (1, Z, pl.Element(bx + 2 * r, padding=(r, r)),
-                 pl.Element(Yp + 2 * r, padding=(r, r))),
+            halo_block_spec(
+                (1, Z, bx + 2 * r, Yp + 2 * r),
                 lambda b, i: (b, 0, i * bx, 0),
+                ((0, 0), (0, 0), (r, r), (r, r)),
             )
         ],
         out_specs=pl.BlockSpec((1, Z, bx, Yp), lambda b, i: (b, 0, i, 0)),

@@ -1,0 +1,72 @@
+"""Shared block-geometry helpers for the Pallas kernels.
+
+Every kernel in this package tiles its operands the same way: pad to
+lane/sublane-aligned shapes (``round_up``), and — for the stencil kernels —
+read overlapping input blocks that carry a radius-r halo.  These helpers used
+to live as underscore-private functions in ``stencil2d.py`` that the other
+kernel modules reached into; they are public here so kernels depend on a
+shared home instead of each other's internals.
+
+``halo_block_spec`` also papers over a JAX API difference: newer JAX spells
+overlapping (element-indexed) blocks ``pl.Element(size, padding=...)``, while
+older releases (e.g. 0.4.x) spell the same thing with
+``indexing_mode=pl.Unblocked(padding)``.  Both interpret the index map as
+element offsets into the padding-extended array, so one index map serves
+both; out-of-array halo elements are undefined and every stencil kernel masks
+them before use.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across JAX versions (``TPUCompilerParams``
+    in 0.4.x releases)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def round_up(v: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``v``."""
+    return (v + m - 1) // m * m
+
+
+def shift2d(xb: jnp.ndarray, dr: int, dc: int, r: int) -> jnp.ndarray:
+    """Slice the halo block so result[i,j] = xb_interior[i+dr, j+dc].
+
+    xb has r halo rows top/bottom and r halo cols left/right; the output is
+    the (block_h, block_w) interior window displaced by (dr, dc).
+    """
+    h, w = xb.shape
+    return jax.lax.slice(xb, (r + dr, r + dc), (h - r + dr, w - r + dc))
+
+
+def halo_block_spec(
+    block_shape: Sequence[int],
+    index_map: Callable[..., tuple],
+    padding: Sequence[tuple[int, int]],
+) -> pl.BlockSpec:
+    """A BlockSpec whose padded dims read overlapping element-indexed blocks.
+
+    ``block_shape`` already includes the halo extent (e.g. ``bh + 2*r``);
+    ``padding[d]`` is the (lo, hi) halo depth of dim d, ``(0, 0)`` for dims
+    indexed block-wise with block size 1 or the full extent — for those the
+    index map value is identical under blocked and element indexing, which is
+    what lets a single map serve both JAX APIs.
+    """
+    if hasattr(pl, "Element"):
+        shape = tuple(
+            pl.Element(s, padding=p) if p != (0, 0) else s
+            for s, p in zip(block_shape, padding)
+        )
+        return pl.BlockSpec(shape, index_map)
+    return pl.BlockSpec(
+        tuple(block_shape), index_map,
+        indexing_mode=pl.Unblocked(tuple(tuple(p) for p in padding)),
+    )

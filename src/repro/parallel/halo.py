@@ -13,6 +13,18 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """shard_map across JAX versions: ``jax.shard_map(check_vma=)`` is the
+    new spelling, ``jax.experimental.shard_map.shard_map(check_rep=)`` the
+    old one (<= 0.4.x)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def _shift_perm(n: int, direction: int) -> list[tuple[int, int]]:
     """Permutation sending shard i -> i+direction (non-wrapping)."""
     if direction > 0:

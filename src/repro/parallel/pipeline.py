@@ -73,12 +73,8 @@ def gpipe(
         if B % M:
             raise ValueError(f"batch {B} not divisible by microbatches {M}")
         x_mb = x.reshape(M, B // M, *x.shape[1:])
-        fn = jax.shard_map(
-            local_fn, mesh=mesh,
-            in_specs=(P(stage_axis), P()),
-            out_specs=P(),
-            check_vma=False,
-        )
+        from repro.parallel.halo import shard_map_compat
+        fn = shard_map_compat(local_fn, mesh, (P(stage_axis), P()), P())
         out = fn(params_stacked, x_mb)
         return out.reshape(B, *x.shape[1:])
 

@@ -1,0 +1,36 @@
+"""Fallback `given`/`settings`/`st` so property tests *skip* when hypothesis
+is absent (see requirements.txt) instead of killing collection for the whole
+module.  Only the hypothesis-decorated tests degrade; every plain test in the
+importing module still runs.
+"""
+import pytest
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        # Varargs-only stub: pytest ignores *args for fixture resolution, so
+        # neither the hypothesis parameters (h=..., w=...) nor `self` are
+        # treated as unresolvable fixtures, for methods and plain functions
+        # alike.
+        def stub(*_a):
+            pytest.skip("hypothesis not installed (see requirements.txt)")
+        stub.__name__ = fn.__name__
+        stub.__doc__ = fn.__doc__
+        return stub
+    return deco
+
+
+class _Strategies:
+    """st.integers(...) etc. — arguments are never exercised by the stub."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; the rest of the module still runs
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import DirichletBC, build_dense_matrix, laplace_jacobi, star
 from repro.core.reference import jacobi_reference

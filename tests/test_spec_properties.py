@@ -1,0 +1,131 @@
+"""Property-based tests for StencilSpec invariants.
+
+Two layers: deterministic sweeps over seeded random specs (always run, no
+third-party deps) and hypothesis-driven versions of the same properties when
+hypothesis is installed (see requirements.txt).
+"""
+import numpy as np
+import pytest
+
+from repro.core import StencilSpec, box, causal_conv1d_spec, laplace_jacobi, star
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+    HAVE_HYPOTHESIS = False
+
+
+def random_spec(seed: int) -> StencilSpec:
+    """A seeded random spec: ndim 1-3, radius <= 2, 1-9 distinct taps."""
+    rng = np.random.default_rng(seed)
+    ndim = int(rng.integers(1, 4))
+    n_taps = int(rng.integers(1, min(10, 5 ** ndim + 1)))
+    taps = {}
+    while len(taps) < n_taps:
+        off = tuple(int(o) for o in rng.integers(-2, 3, size=ndim))
+        taps[off] = float(np.round(rng.standard_normal(), 3)) or 0.125
+    return StencilSpec(taps=taps, name=f"rand{seed}")
+
+
+def check_roundtrip(spec: StencilSpec):
+    """to_kernel() must hold exactly the taps, each at its offset slot."""
+    ker = spec.to_kernel()
+    lo = [min(off[d] for off, _ in spec.taps) for d in range(spec.ndim)]
+    reconstructed = {}
+    for idx in np.ndindex(*ker.shape):
+        if ker[idx] != 0.0:
+            off = tuple(i + l for i, l in zip(idx, lo))
+            reconstructed[off] = float(ker[idx])
+    expected = {off: w for off, w in spec.taps if w != 0.0}
+    assert reconstructed == pytest.approx(expected)
+
+
+def check_radius_footprint(spec: StencilSpec):
+    """radius is the max Chebyshev reach; footprint the tap bounding box."""
+    offs = np.array([off for off, _ in spec.taps])
+    assert spec.radius == int(np.abs(offs).max())
+    expect_fp = tuple(int(offs[:, d].max() - offs[:, d].min() + 1)
+                      for d in range(spec.ndim))
+    assert spec.footprint == expect_fp
+    assert all(f <= 2 * spec.radius + 1 for f in spec.footprint)
+    assert int(np.prod(spec.footprint)) >= len(spec.taps)
+
+
+def check_canonicalization(spec: StencilSpec):
+    """Tap order must not matter: same spec, same hash, dict-key safe."""
+    shuffled = list(spec.taps)[::-1]
+    again = StencilSpec(taps=tuple(shuffled), name=spec.name)
+    assert again == spec
+    assert hash(again) == hash(spec)
+    assert len({spec: 1, again: 2}) == 1
+    from_mapping = StencilSpec(taps=dict(spec.taps), name=spec.name)
+    assert from_mapping == spec
+
+
+def check_flop_counts(spec: StencilSpec):
+    n = len(spec.taps)
+    assert spec.useful_flops_per_point == 2 * n - 1
+    w = int(np.prod(spec.footprint))
+    assert spec.delivered_flops_per_point_conv() == 2 * w - 1
+    assert spec.delivered_flops_per_point_conv() >= spec.useful_flops_per_point
+
+
+class TestDeterministicSweep:
+    SEEDS = list(range(40))
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_kernel_roundtrip(self, seed):
+        check_roundtrip(random_spec(seed))
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_radius_footprint_agree(self, seed):
+        check_radius_footprint(random_spec(seed))
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_canonicalization_order_insensitive(self, seed):
+        check_canonicalization(random_spec(seed))
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_flop_accounting(self, seed):
+        check_flop_counts(random_spec(seed))
+
+
+class TestPaperCounts:
+    """The §4 numbers the FLOP model must reproduce exactly."""
+
+    def test_2d_laplace_useful_is_7(self):
+        assert laplace_jacobi(2).useful_flops_per_point == 7
+
+    def test_2d_laplace_conv_delivered_is_17(self):
+        assert laplace_jacobi(2).delivered_flops_per_point_conv() == 17
+
+    def test_2d_laplace_dense_delivered_is_8191(self):
+        assert laplace_jacobi(2).delivered_flops_per_point_dense(4096) == 8191
+
+    def test_named_factories_roundtrip(self):
+        for spec in (laplace_jacobi(1), laplace_jacobi(2), laplace_jacobi(3),
+                     star(2, [0.1, 0.05], center=0.4), box(2), box(3),
+                     causal_conv1d_spec([0.1, 0.2, 0.3, 0.4])):
+            check_roundtrip(spec)
+            check_radius_footprint(spec)
+            check_canonicalization(spec)
+            check_flop_counts(spec)
+
+    def test_inconsistent_ranks_rejected(self):
+        with pytest.raises(ValueError, match="inconsistent"):
+            StencilSpec(taps={(1,): 0.5, (0, 1): 0.5})
+
+
+class TestHypothesisSweep:
+    """Same invariants, hypothesis-driven (skips when not installed)."""
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_all_invariants(self, seed):
+        spec = random_spec(seed)
+        check_roundtrip(spec)
+        check_radius_footprint(spec)
+        check_canonicalization(spec)
+        check_flop_counts(spec)
