@@ -30,3 +30,12 @@ def time_callable(fn: Callable, *args, warmup: int = 1, iters: int = 3,
 
 def csv_row(name: str, seconds: float, derived: str) -> str:
     return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def solver_metric(iters: int, s_per_iter: float, *, mode: str = "fixed",
+                  **extra) -> dict:
+    """One row of BENCH_stencil.json's ``solver`` section (stable schema:
+    every row has mode/iters/s_per_iter; converged rows add
+    backend/residual/converged)."""
+    return {"mode": mode, "iters": int(iters),
+            "s_per_iter": float(s_per_iter), **extra}

@@ -3,7 +3,9 @@ conditions — the channels-trick Conv2D encoding (the only 3D path the CS-1
 stack supported) vs the native Conv3D and direct-stencil paths the paper
 could not use.  Quantifies the Z²-banded channel matrix overhead.
 
-All paths dispatch through the unified ``make_plan`` API (core/plan.py).
+All paths dispatch through the unified solver engine (core/solver.py); the
+run-to-convergence section reports iterations and seconds per iteration for
+the 3D problem.  ``run`` returns (csv rows, solver-metrics dict).
 """
 from __future__ import annotations
 
@@ -12,24 +14,30 @@ import numpy as np
 
 from repro.core import (
     DeliveredPerf,
+    Solver,
     encoding_flops_per_point,
     laplace_jacobi,
-    make_plan,
 )
-from benchmarks.common import csv_row, time_callable
+from benchmarks.common import csv_row, solver_metric, time_callable
 
 GRID = (10, 64, 64)  # (Z, X, Y) — the largest supported shape on the CS-1
 
 
-def run(steps: int = 4, iters: int = 50, kernel_iters: int = 5):
+def run(steps: int = 4, iters: int = 50, kernel_iters: int = 5,
+        solve_rtol: float = 1e-6, solve_max_iters: int = 10_000):
     spec = laplace_jacobi(3)
     n = GRID[0] * GRID[1] * GRID[2]
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((steps, *GRID)), jnp.float32)
     rows = []
+    metrics: dict[str, dict] = {}
 
-    p_ch = make_plan(spec, GRID, backend="conv", bc=1.0, iters=iters)
-    sec = time_callable(p_ch, x)
+    def fixed(backend, n_iters):
+        return Solver(spec, GRID, backend=backend, bc=1.0, rtol=None,
+                      atol=None, max_iters=n_iters)
+
+    s_ch = fixed("conv", iters)
+    sec = time_callable(s_ch.plan, x)
     perf = DeliveredPerf(n * steps,
                          encoding_flops_per_point(spec, "conv3d_channels",
                                                   n_total=GRID[0]),
@@ -37,25 +45,43 @@ def run(steps: int = 4, iters: int = 50, kernel_iters: int = 5):
     rows.append(csv_row("fig6/conv2d-channels", sec,
                         f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
                         f"waste x{perf.waste_ratio:.1f} (Z-banded matrix)"))
+    metrics["fig6/conv2d-channels"] = solver_metric(iters, sec / iters)
 
-    p_nat = make_plan(spec, GRID, backend="conv3d_native", bc=1.0, iters=iters)
-    sec = time_callable(p_nat, x)
+    s_nat = fixed("conv3d_native", iters)
+    sec = time_callable(s_nat.plan, x)
     perf = DeliveredPerf(n * steps, encoding_flops_per_point(spec, "conv"),
                          13, iters, sec)
     rows.append(csv_row("fig6/native-conv3d", sec,
                         f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
                         f"waste x{perf.waste_ratio:.1f}"))
+    metrics["fig6/native-conv3d"] = solver_metric(iters, sec / iters)
 
-    p_k = make_plan(spec, GRID, backend="pallas", bc=1.0, iters=kernel_iters)
-    sec = time_callable(p_k, x, warmup=1, iters=1)
+    s_k = fixed("pallas", kernel_iters)
+    sec = time_callable(s_k.plan, x, warmup=1, iters=1)
     perf = DeliveredPerf(n * steps, encoding_flops_per_point(spec, "direct"),
                          13, kernel_iters, sec)
     rows.append(csv_row("fig6/pallas-direct(interp)", sec,
                         f"{perf.delivered_gflops:.3f} delivered GFLOPS | "
                         f"waste x{perf.waste_ratio:.2f} (interpret mode)"))
-    return rows
+    metrics["fig6/pallas-direct(interp)"] = solver_metric(
+        kernel_iters, sec / kernel_iters)
+
+    # run-to-convergence on the Fig 6 problem (hot walls, cold interior)
+    s = Solver(spec, GRID, backend="conv3d_native", bc=1.0, rtol=solve_rtol,
+               check_every=20, max_iters=solve_max_iters)
+    x0 = jnp.zeros(GRID, jnp.float32)
+    s.solve(x0)                 # compile outside the reported wall time
+    res = s.solve(x0)
+    spi = res.wall_seconds / max(res.iterations, 1)
+    rows.append(csv_row("fig6/solve/conv3d_native", res.wall_seconds,
+                        f"iters={res.iterations} s/iter={spi:.2e} "
+                        f"residual={res.residual:.1e} converged={res.converged}"))
+    metrics["fig6/solve/conv3d_native"] = solver_metric(
+        res.iterations, spi, mode="converged", backend=res.backend,
+        residual=float(res.residual), converged=bool(res.converged))
+    return rows, metrics
 
 
 if __name__ == "__main__":
-    for r in run():
+    for r in run()[0]:
         print(r)

@@ -1,7 +1,19 @@
 """Benchmark runner — one section per paper table/figure plus the roofline.
 Prints ``name,us_per_call,derived`` CSV rows and (with ``--json``) writes a
-machine-readable name -> us_per_call map so the perf trajectory is trackable
-across commits.
+machine-readable artifact so the perf trajectory is trackable across commits.
+
+JSON schema (stable, version 2):
+
+  {"schema": 2,
+   "us_per_call": {row name: microseconds per timed call},
+   "solver":      {row name: {"mode": "fixed"|"converged",
+                              "iters": int, "s_per_iter": float,
+                              # converged rows additionally carry:
+                              "backend": str, "residual": float,
+                              "converged": bool}}}
+
+Sections may return either a list of CSV rows or (rows, solver-metrics
+dict); the metrics land in the ``solver`` section.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only table1_2d ...]
                                           [--json BENCH_stencil.json]
@@ -29,7 +41,8 @@ def main() -> int:
                     help="smaller step counts (CI)")
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write {row name: us_per_call} JSON")
+                    help="also write the schema-2 JSON artifact "
+                         "({schema, us_per_call, solver})")
     args = ap.parse_args()
     only = ({_ALIASES.get(o, o) for o in args.only} if args.only else None)
 
@@ -52,12 +65,19 @@ def main() -> int:
                   f"{sorted(sections) + sorted(_ALIASES)}", file=sys.stderr)
             failed += len(unknown)
     results: dict[str, float] = {}
+    solver_metrics: dict[str, dict] = {}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:
             continue
         try:
-            for row in fn():
+            out = fn()
+            if isinstance(out, tuple):
+                rows, metrics = out
+                solver_metrics.update(metrics)
+            else:
+                rows = out
+            for row in rows:
                 print(row, flush=True)
                 parts = row.split(",")
                 if len(parts) >= 2:
@@ -75,9 +95,12 @@ def main() -> int:
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
     if args.json:
+        payload = {"schema": 2, "us_per_call": results,
+                   "solver": solver_metrics}
         with open(args.json, "w") as f:
-            json.dump(results, f, indent=2, sort_keys=True)
-        print(f"# wrote {len(results)} rows to {args.json}", file=sys.stderr)
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {len(results)} timing rows + {len(solver_metrics)} "
+              f"solver rows to {args.json}", file=sys.stderr)
     return 1 if failed else 0
 
 

@@ -1,15 +1,20 @@
 """Paper Table 1: delivered performance for 2D Jacobi (X=Y=64), dense vs
 convolution encodings, fp32 vs bf16 ("mixed") precision.
 
-All encodings dispatch through the unified ``make_plan`` API
-(core/plan.py), so this benchmark exercises exactly the code path users
-call; each plan does its one-time work (dense-matrix build, jit) outside the
-timed region.  The delivered-performance metric (Eq. 1) reports GFLOPS from
-the analytic per-encoding FLOP counts (7 useful / 17 conv / 8191 dense per
-element).
+All encodings dispatch through the unified solver engine
+(core/solver.py -> core/plan.py): each fixed-step section times the
+``Solver``'s compiled chunk (its one-time work — dense-matrix build, jit —
+happens outside the timed region), and the run-to-convergence section runs
+the paper's actual experiment (iterate until the relative residual settles)
+and reports iterations-to-convergence and seconds per iteration.  The
+delivered-performance metric (Eq. 1) reports GFLOPS from the analytic
+per-encoding FLOP counts (7 useful / 17 conv / 8191 dense per element).
 
 Also reproduces the dense path's iteration-memory analysis: one N² layer per
 iteration limited the CS-1 to 7 iterations (paper §4).
+
+``run`` returns (csv rows, solver-metrics dict); benchmarks/run.py folds the
+metrics into BENCH_stencil.json's stable ``solver`` section.
 """
 from __future__ import annotations
 
@@ -19,79 +24,106 @@ import numpy as np
 from repro.core import (
     BoundaryMode,
     DeliveredPerf,
+    Solver,
     dense_layer_bytes,
     encoding_flops_per_point,
     laplace_jacobi,
-    make_plan,
 )
 
-from benchmarks.common import csv_row, time_callable
+from benchmarks.common import csv_row, solver_metric, time_callable
 
 
 def run(steps: int = 8, iters_dense: int = 7, iters_conv: int = 100,
-        grid=(64, 64), kernel_steps: int = 4, kernel_iters: int = 10):
+        grid=(64, 64), kernel_steps: int = 4, kernel_iters: int = 10,
+        solve_rtol: float = 1e-6, solve_max_iters: int = 20_000):
     spec = laplace_jacobi(2)
     n = grid[0] * grid[1]
     rng = np.random.default_rng(0)
     rows = []
+    metrics: dict[str, dict] = {}
+
+    def fixed(backend, iters, dtype=jnp.float32, **kw):
+        return Solver(spec, grid, backend=backend, bc=1.0, rtol=None,
+                      atol=None, max_iters=iters, dtype=dtype, **kw)
 
     for dtype, label in ((jnp.float32, "fp32"), (jnp.bfloat16, "bf16")):
         x = jnp.asarray(rng.standard_normal((steps, *grid)), dtype)
 
         # dense encoding (Algorithm 1): 7 iterations (the CS-1 limit)
-        p_dense = make_plan(spec, grid, backend="dense", bc=1.0,
-                            mode=BoundaryMode.MATRIX, iters=iters_dense,
-                            dtype=dtype)
-        sec = time_callable(p_dense, x)
+        s_dense = fixed("dense", iters_dense, dtype,
+                        mode=BoundaryMode.MATRIX)
+        sec = time_callable(s_dense.plan, x)
         perf = DeliveredPerf(n * steps, encoding_flops_per_point(spec, "dense", n),
                              7, iters_dense, sec)
-        rows.append(csv_row(f"table1/dense/{label}", sec,
+        name = f"table1/dense/{label}"
+        rows.append(csv_row(name, sec,
                             f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
                             f"{perf.useful_gflops:.3f} useful | waste x{perf.waste_ratio:.0f}"))
+        metrics[name] = solver_metric(iters_dense, sec / iters_dense)
 
         # convolution encoding (Algorithm 2), mask-trick BCs
-        p_conv = make_plan(spec, grid, backend="conv", bc=1.0,
-                           mode=BoundaryMode.MASK, iters=iters_conv,
-                           dtype=dtype)
-        sec = time_callable(p_conv, x)
+        s_conv = fixed("conv", iters_conv, dtype)
+        sec = time_callable(s_conv.plan, x)
         perf = DeliveredPerf(n * steps, encoding_flops_per_point(spec, "conv"),
                              7, iters_conv, sec)
-        rows.append(csv_row(f"table1/conv/{label}", sec,
+        name = f"table1/conv/{label}"
+        rows.append(csv_row(name, sec,
                             f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
                             f"{perf.useful_gflops:.3f} useful | waste x{perf.waste_ratio:.1f}"))
+        metrics[name] = solver_metric(iters_conv, sec / iters_conv)
 
     # what backend="auto"'s cost model picks for this cell on this host
-    p_auto = make_plan(spec, grid, backend="auto", bc=1.0, iters=iters_conv)
+    s_auto = fixed("auto", iters_conv)
     x = jnp.asarray(rng.standard_normal((steps, *grid)), jnp.float32)
-    sec = time_callable(p_auto, x)
+    sec = time_callable(s_auto.plan, x)
     perf = DeliveredPerf(n * steps,
                          encoding_flops_per_point(
-                             spec, "conv" if p_auto.backend.startswith("conv")
+                             spec, "conv" if s_auto.backend.startswith("conv")
                              else "direct"),
                          7, iters_conv, sec)
-    rows.append(csv_row(f"table1/auto={p_auto.backend}/fp32", sec,
+    name = f"table1/auto={s_auto.backend}/fp32"
+    rows.append(csv_row(name, sec,
                         f"{perf.delivered_gflops:.2f} delivered GFLOPS | "
                         f"cost-model pick"))
+    metrics[name] = solver_metric(iters_conv, sec / iters_conv)
 
     # direct Pallas stencil (TPU-native re-think; interpret mode on CPU)
     x = jnp.asarray(rng.standard_normal((kernel_steps, *grid)), jnp.float32)
-    p_k = make_plan(spec, grid, backend="pallas", bc=1.0, iters=kernel_iters)
-    sec = time_callable(p_k, x, warmup=1, iters=1)
+    s_k = fixed("pallas", kernel_iters)
+    sec = time_callable(s_k.plan, x, warmup=1, iters=1)
     perf = DeliveredPerf(n * kernel_steps,
                          encoding_flops_per_point(spec, "direct"), 7,
                          kernel_iters, sec)
     rows.append(csv_row("table1/pallas-direct/fp32(interp)", sec,
                         f"{perf.delivered_gflops:.3f} delivered GFLOPS | "
                         f"waste x{perf.waste_ratio:.2f} (interpret mode)"))
+    metrics["table1/pallas-direct/fp32(interp)"] = solver_metric(
+        kernel_iters, sec / kernel_iters)
+
+    # run-to-convergence: the paper's actual experiment (Jacobi iterated
+    # until the relative L2 residual settles), via the solver time loop
+    s = Solver(spec, grid, backend="auto", bc=1.0, rtol=solve_rtol,
+               check_every=20, max_iters=solve_max_iters)
+    x0 = jnp.zeros(grid, jnp.float32)
+    s.solve(x0)                 # compile outside the reported wall time
+    res = s.solve(x0)
+    spi = res.wall_seconds / max(res.iterations, 1)
+    name = f"table1/solve/auto={res.backend}"
+    rows.append(csv_row(name, res.wall_seconds,
+                        f"iters={res.iterations} s/iter={spi:.2e} "
+                        f"residual={res.residual:.1e} converged={res.converged}"))
+    metrics[name] = solver_metric(
+        res.iterations, spi, mode="converged", backend=res.backend,
+        residual=float(res.residual), converged=bool(res.converged))
 
     # the dense path's layer-memory wall (paper: 7 iterations max on CS-1)
     for it in (7, 8):
         mb = dense_layer_bytes(grid, it) / 1e6
         rows.append(csv_row(f"table1/dense-layer-mem/{it}iters", 0.0,
                             f"{mb:.0f} MB of N^2 layers"))
-    return rows
+    return rows, metrics
 
 
 if __name__ == "__main__":
-    for r in run():
+    for r in run()[0]:
         print(r)

@@ -1,7 +1,8 @@
 """3D heat diffusion with non-zero Dirichlet boundary conditions — the paper's
 Fig 6 scenario (X=64, Y=64, Z=10) through the channels-trick Conv2D encoding
-and the native paths the CS-1 could not express; optionally distributed over
-a device grid with halo exchange.
+and the native paths the CS-1 could not express, run to convergence through
+the ``solve`` engine; optionally distributed over a device grid with halo
+exchange (same ``solve()`` entry point, ``backend="halo"``).
 
   PYTHONPATH=src python examples/heat3d.py [--distributed]
 
@@ -15,14 +16,8 @@ sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import (
-    DirichletBC,
-    jacobi_reference,
-    laplace_jacobi,
-    stencil_apply,
-)
+from repro.core import laplace_jacobi, solve
 
 
 def main():
@@ -33,45 +28,47 @@ def main():
 
     spec = laplace_jacobi(3)
     bc_value = 100.0  # hot walls
-    bc = DirichletBC(bc_value)
     grid = (10, 64, 64)
-    rng = np.random.default_rng(0)
-    x0 = jnp.zeros((1, *grid), jnp.float32)
+    x0 = jnp.zeros(grid, jnp.float32)
 
     print(f"== 3D heat, grid (Z,X,Y)={grid}, walls at {bc_value} ==")
-    ref = jnp.stack([jacobi_reference(x0[0], spec, bc, args.iters)])
+    # One spec, three encodings — all through the unified solver engine
+    # (fixed-iteration mode), cross-validated against the oracle backend.
+    ref = solve(spec, x0, backend="reference", bc=bc_value,
+                rtol=None, atol=None, max_iters=args.iters).x
+    for backend in ("conv", "conv3d_native", "pallas", "auto"):
+        res = solve(spec, x0, backend=backend, bc=bc_value,
+                    rtol=None, atol=None, max_iters=args.iters)
+        tag = f"auto -> {res.backend}" if backend == "auto" else backend
+        print(f"{tag:22s} err={float(jnp.abs(res.x - ref).max()):.2e}")
 
-    # One spec, three encodings — all through the unified dispatcher.
-    ch = stencil_apply(spec, x0, backend="conv", bc=bc_value, iters=args.iters)
-    nat = stencil_apply(spec, x0, backend="conv3d_native", bc=bc_value,
-                        iters=args.iters)
-    ker = stencil_apply(spec, x0, backend="pallas", bc=bc_value,
-                        iters=args.iters)
-    auto = stencil_apply(spec, x0, backend="auto", bc=bc_value,
-                         iters=args.iters)
-    print(f"channels-trick  err={float(jnp.abs(ch - ref).max()):.2e}")
-    print(f"native conv3d   err={float(jnp.abs(nat - ref).max()):.2e}")
-    print(f"pallas direct   err={float(jnp.abs(ker - ref).max()):.2e}")
-    print(f"auto            err={float(jnp.abs(auto - ref).max()):.2e}")
-    centre = ch[0, grid[0] // 2, grid[1] // 2, grid[2] // 2]
-    print(f"centre temperature after {args.iters} iters: {float(centre):.3f} "
-          f"(walls {bc_value}) — heat diffusing inward ✓")
+    # the actual experiment: iterate until the walls' heat fills the slab
+    res = solve(spec, x0, backend="auto", bc=bc_value,
+                rtol=1e-6, check_every=20, max_iters=20_000)
+    centre = res.x[grid[0] // 2, grid[1] // 2, grid[2] // 2]
+    print(f"solve: converged={res.converged} after {res.iterations} iters "
+          f"(residual {res.residual:.1e}, backend {res.backend}); centre "
+          f"temperature {float(centre):.3f} (walls {bc_value}) — heat "
+          f"diffused inward ✓")
 
     if args.distributed:
         n = len(jax.devices())
         if n < 2:
             print("(--distributed skipped: single device)")
             return
-        # distribute the 2D X-Y plane of the mid-Z slice problem
+        # distribute the 2D X-Y plane of the mid-Z slice problem over the
+        # device mesh — the identical solve() call, backend="halo"
         mesh = jax.make_mesh((2, n // 2), ("data", "model"))
         spec2 = laplace_jacobi(2)
         x2 = jnp.zeros((2, 64, 64), jnp.float32)
-        out = stencil_apply(spec2, x2, backend="halo", bc=bc_value,
-                            iters=args.iters, mesh=mesh)
-        ref2 = jnp.stack([jacobi_reference(x2[i], spec2, DirichletBC(bc_value),
-                                           args.iters) for i in range(2)])
-        print(f"distributed halo-exchange (mesh {dict(mesh.shape)}) "
-              f"err={float(jnp.abs(out - ref2).max()):.2e}")
+        dist = solve(spec2, x2, backend="halo", mesh=mesh, bc=bc_value,
+                     rtol=1e-6, check_every=20, max_iters=20_000)
+        single = solve(spec2, x2, backend="reference", bc=bc_value,
+                       rtol=1e-6, check_every=20, max_iters=20_000)
+        err = float(jnp.abs(dist.x - single.x).max())
+        print(f"distributed halo-exchange solve (mesh {dict(mesh.shape)}): "
+              f"iters={list(map(int, dist.iterations))} vs single-device "
+              f"{list(map(int, single.iterations))}, field err={err:.2e}")
 
 
 if __name__ == "__main__":

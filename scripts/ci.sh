@@ -1,13 +1,28 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + the fast stencil benchmark with a
-# machine-readable perf artifact (BENCH_stencil.json) for trajectory tracking.
+# CI entry point.
+#
+#   scripts/ci.sh          fast tier: tests minus the `slow` marker (full
+#                          conformance matrix, subprocess multi-device runs)
+#                          + the fast stencil benchmark
+#   scripts/ci.sh --all    full tier: every test (matrix + solver +
+#                          distributed) + the table1/fig6 benchmark sections
+#
+# Both tiers refresh BENCH_stencil.json (schema 2: us_per_call + solver
+# metrics) so the perf trajectory and the cost-model regression tests in
+# tests/solver/test_cost_model.py stay anchored to this host.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
-
-echo "== stencil benchmark (fast) =="
-python -m benchmarks.run --fast --only table1_2d --json BENCH_stencil.json
+if [[ "${1:-}" == "--all" ]]; then
+  echo "== full test suite (matrix + solver + distributed tiers) =="
+  python -m pytest -x -q
+  echo "== stencil benchmark (table1 + fig6, with solver metrics) =="
+  python -m benchmarks.run --only table1_2d fig6_3d --json BENCH_stencil.json
+else
+  echo "== fast test tier (-m 'not slow') =="
+  python -m pytest -x -q -m "not slow"
+  echo "== stencil benchmark (fast) =="
+  python -m benchmarks.run --fast --only table1_2d --json BENCH_stencil.json
+fi

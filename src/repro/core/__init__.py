@@ -10,6 +10,12 @@ temporally-fused Pallas, sharded halo exchange), choosing via a small cost
 model when ``backend="auto"``; ``make_plan`` prepares a reusable executor and
 ``backend_support`` reports which backends are legal for a given cell.  Every
 backend is cross-validated against the oracle in tests/conformance/.
+
+The time dimension lives in ``solver.py``: ``solve(spec, x0, ...)`` /
+``Solver`` run the whole iteration loop to convergence as one compiled
+program over any backend (batched per-instance convergence, distributed
+halo-exchange stepping, roofline-selected temporal fusion); pinned down in
+tests/solver/.
 """
 from repro.core.boundary import BoundaryMode, DirichletBC
 from repro.core.conv1d import causal_conv1d, causal_conv1d_update
@@ -38,6 +44,7 @@ from repro.core.plan import (
     stencil_apply,
 )
 from repro.core.reference import apply_stencil, jacobi_reference, jacobi_step
+from repro.core.solver import SolveResult, Solver, solve
 from repro.core.stencil import (
     StencilSpec,
     box,
@@ -51,8 +58,11 @@ __all__ = [
     "BackendSupport",
     "BoundaryMode",
     "DirichletBC",
+    "SolveResult",
+    "Solver",
     "StencilPlan",
     "StencilSpec",
+    "solve",
     "apply_stencil",
     "backend_support",
     "choose_backend",

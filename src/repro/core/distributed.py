@@ -17,8 +17,6 @@ dependency graph permute-free for the interior.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -41,13 +39,18 @@ def _local_step(xp, spec, r, bc_value, grows, gcols, H, W):
     return jnp.where(interior, acc, np.float32(bc_value)).astype(xp.dtype)
 
 
-def make_distributed_jacobi(mesh, spec: StencilSpec, *, H: int, W: int,
-                            bc_value: float, iterations: int,
-                            row_axis: str = "data", col_axis: str = "model",
-                            batch_axis: str | None = None):
-    """Builds a jitted (batch, H, W) -> (batch, H, W) distributed solver.
+def make_halo_runner(mesh, spec: StencilSpec, *, H: int, W: int,
+                     bc_value: float, iterations: int,
+                     row_axis: str = "data", col_axis: str = "model",
+                     batch_axis: str | None = None):
+    """Builds an unjitted (batch, H, W) -> (batch, H, W) halo-exchange stepper.
 
-    The input/output are sharded P(batch_axis, row_axis, col_axis).
+    The input/output are sharded P(batch_axis, row_axis, col_axis).  This is
+    the distribution primitive the ``halo`` backend of ``core.plan.make_plan``
+    wraps (and jits); user-facing entry points are
+    ``stencil_apply(..., backend="halo", mesh=...)`` for a fixed step count
+    and ``core.solver.solve(..., backend="halo", mesh=...)`` for a full
+    run-to-convergence time loop.
     """
     if spec.ndim != 2:
         raise ValueError("distributed jacobi is 2D (the paper's fig-5 path)")
@@ -83,4 +86,4 @@ def make_distributed_jacobi(mesh, spec: StencilSpec, *, H: int, W: int,
             x0, NamedSharding(mesh, in_spec))
         return fn(x0)
 
-    return jax.jit(run)
+    return run

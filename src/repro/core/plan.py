@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core.boundary import BoundaryMode, DirichletBC
 from repro.core.metrics import encoding_flops_per_point
-from repro.core.reference import apply_stencil, jacobi_reference
+from repro.core.reference import apply_stencil, jacobi_step
 from repro.core.stencil import StencilSpec
 
 BACKENDS = (
@@ -215,11 +215,15 @@ def estimate_seconds(
     device: DeviceProfile,
     *,
     itemsize: int = 4,
+    fuse: int | None = None,
 ) -> float:
     """Roofline-style time estimate for ``iters`` applications on one step.
 
     time = max(compute, memory) per iteration; temporal fusion divides the
-    streamed bytes by the fuse depth (the whole point of jacobi_fused.py).
+    streamed bytes by the fuse depth (the whole point of jacobi_fused.py) but
+    pays the trapezoid's rim recompute.  ``fuse=None`` prices the depth
+    ``make_plan`` would resolve for ``iters``; passing an explicit depth lets
+    callers (the solver's fuse auto-selection) compare candidate depths.
     """
     n = int(np.prod(grid_shape))
     stream = 2 * n * itemsize  # read + write the grid once per iteration
@@ -240,8 +244,13 @@ def estimate_seconds(
         flops = encoding_flops_per_point(spec, "direct")
         compute = flops * n / device.vector_flops
         mem = stream / device.mem_bw
-        if backend == "pallas_fused":
-            mem /= _resolve_fuse(iters)  # fuse-depth fewer HBM round-trips
+        if fuse is None:
+            fuse = _resolve_fuse(iters) if backend == "pallas_fused" else 1
+        if backend in ("pallas", "pallas_fused") and fuse > 1 and spec.ndim == 2:
+            from repro.kernels.tiling import fuse_redundancy
+            mem /= fuse  # fuse-depth fewer HBM round-trips ...
+            # ... at the price of recomputing the overlapping block rims
+            compute *= fuse_redundancy(grid_shape, fuse, spec.radius)
 
     per_iter = max(compute, mem)
     total = per_iter * iters
@@ -261,6 +270,7 @@ def choose_backend(
     iters: int = 1,
     device_kind: str | None = None,
     mesh=None,
+    fuse: int | None = None,
 ) -> tuple[str, dict[str, float]]:
     """Pick the cheapest supported backend; returns (name, cost table).
 
@@ -269,6 +279,11 @@ def choose_backend(
     supplied; ``reference`` is the cross-validation oracle, so auto only
     falls back to it when no real encoding supports the cell (otherwise
     "auto matches the oracle" would be circular).
+
+    ``fuse`` prices the Pallas paths at an explicit temporal depth (e.g. the
+    deepest depth the caller's chunking can actually run — the solver passes
+    this); None prices the depth make_plan itself would resolve for
+    ``iters``.
     """
     if device_kind is None:
         device_kind = jax.default_backend()
@@ -283,7 +298,8 @@ def choose_backend(
         if not backend_support(b, spec, grid_shape=grid_shape, mode=mode,
                                bc=bc, mesh=mesh):
             continue
-        costs[b] = estimate_seconds(b, spec, grid_shape, iters, device)
+        costs[b] = estimate_seconds(b, spec, grid_shape, iters, device,
+                                    fuse=fuse)
     if not costs:
         # Oracle fallback: always legal, never preferred.
         costs["reference"] = estimate_seconds("reference", spec, grid_shape,
@@ -341,9 +357,24 @@ def _scalar_bc_value(bc: DirichletBC | None) -> float | None:
 
 def _raw_reference(x, spec, iters):
     def one(g):
-        for _ in range(iters):
-            g = apply_stencil(g, spec)
-        return g
+        def body(t, _):
+            return apply_stencil(t, spec), None
+        y, _ = jax.lax.scan(body, g, None, length=iters)
+        return y
+    return jax.vmap(one)(x)
+
+
+def _bc_reference(x, spec, bc, iters):
+    # Same math as jacobi_reference, but the iteration loop is a lax.scan:
+    # the oracle's unrolled Python loop is fine for the conformance matrix's
+    # 2 iterations, but XLA compile time explodes super-linearly once the
+    # solver asks for O(100)-iteration chunks.
+    def one(g):
+        g = bc.set_boundary(g)
+        def body(t, _):
+            return jacobi_step(t, spec, bc), None
+        y, _ = jax.lax.scan(body, g, None, length=iters)
+        return y
     return jax.vmap(one)(x)
 
 
@@ -397,12 +428,10 @@ def make_plan(
 
     fn = _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype,
                    mesh, interpret)
-    if backend != "halo":
-        # One jit over the whole closure: the per-call preamble (conv-kernel
-        # build, set_boundary, mask/bc grids) traces into constants, so
-        # repeated plan calls pay only compiled execution.  The halo path is
-        # already a jitted shard_map program.
-        fn = jax.jit(fn)
+    # One jit over the whole closure: the per-call preamble (conv-kernel
+    # build, set_boundary, mask/bc grids, halo sharding constraint) traces
+    # into constants, so repeated plan calls pay only compiled execution.
+    fn = jax.jit(fn)
     return StencilPlan(spec=spec, backend=backend, grid_shape=grid_shape,
                        mode=mode, iters=iters, fuse=fuse, costs=costs, _fn=fn)
 
@@ -415,8 +444,7 @@ def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
     if backend == "reference":
         if bc is None:
             return lambda x: _raw_reference(x.astype(dtype), spec, iters)
-        return lambda x: jax.vmap(
-            lambda g: jacobi_reference(g, spec, bc, iters))(x.astype(dtype))
+        return lambda x: _bc_reference(x.astype(dtype), spec, bc, iters)
 
     if backend == "dense":
         from repro.core.dense_encoding import build_dense_matrix, dense_jacobi
@@ -450,10 +478,10 @@ def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
                                           interpret=interpret)
 
             def run_raw3d(x):
-                x = x.astype(dtype)
-                for _ in range(iters):
-                    x = stencil3d(x, spec, interpret=interpret)
-                return x
+                def body(t, _):
+                    return stencil3d(t, spec, interpret=interpret), None
+                y, _ = jax.lax.scan(body, x.astype(dtype), None, length=iters)
+                return y
             return run_raw3d
 
         if bc_value is not None:
@@ -464,20 +492,21 @@ def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
         from repro.kernels import jacobi2d_fused_step
 
         def run_raw2d(x):
-            x = x.astype(dtype)
-            for _ in range(iters // fuse):
-                x = jacobi2d_fused_step(x, spec, fuse=fuse,
-                                        interpret=interpret)
-            return x
+            def body(t, _):
+                return jacobi2d_fused_step(t, spec, fuse=fuse,
+                                           interpret=interpret), None
+            y, _ = jax.lax.scan(body, x.astype(dtype), None,
+                                length=iters // fuse)
+            return y
         return run_raw2d
 
     if backend == "halo":
-        from repro.core.distributed import make_distributed_jacobi
+        from repro.core.distributed import make_halo_runner
         bc_value = _scalar_bc_value(bc)
         if mesh is None:
             mesh = jax.make_mesh((1, 1), ("halo_row", "halo_col"))
         row_axis, col_axis = mesh.axis_names[0], mesh.axis_names[1]
-        run = make_distributed_jacobi(
+        run = make_halo_runner(
             mesh, spec, H=grid_shape[0], W=grid_shape[1], bc_value=bc_value,
             iterations=iters, row_axis=row_axis, col_axis=col_axis)
         return lambda x: run(x.astype(dtype))

@@ -27,7 +27,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.stencil import StencilSpec
-from repro.kernels.tiling import halo_block_spec, round_up, shift2d
+from repro.kernels.tiling import fused_block_geometry, halo_block_spec, shift2d
 
 
 def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, T: int,
@@ -96,10 +96,7 @@ def jacobi2d_fused_step(
         interpret = jax.default_backend() == "cpu"
     B, H, W = x.shape
     r = spec.radius
-    halo = fuse * r
-    bh = min(block_h, round_up(H, 8))
-    Hp = round_up(H, bh)
-    Wp = round_up(W, 128)
+    bh, Hp, Wp, halo = fused_block_geometry(H, W, fuse, r, block_h)
     xp = jnp.pad(x, ((0, 0), (0, Hp - H), (0, Wp - W)))
 
     kern = functools.partial(

@@ -47,6 +47,34 @@ def shift2d(xb: jnp.ndarray, dr: int, dc: int, r: int) -> jnp.ndarray:
     return jax.lax.slice(xb, (r + dr, r + dc), (h - r + dr, w - r + dc))
 
 
+def fused_block_geometry(H: int, W: int, fuse: int, r: int,
+                         block_h: int = 256) -> tuple[int, int, int, int]:
+    """Block geometry of the temporally-fused 2D Jacobi kernel.
+
+    Returns ``(bh, Hp, Wp, halo)``: the row-block height, the padded grid
+    extents, and the per-side halo depth (``fuse * r``).  This is the single
+    source of truth shared by ``jacobi_fused.py`` (which tiles with it) and
+    the ``plan.py`` roofline model (which prices the rim recompute it
+    implies).
+    """
+    halo = fuse * r
+    bh = min(block_h, round_up(H, 8))
+    Hp = round_up(H, bh)
+    Wp = round_up(W, 128)
+    return bh, Hp, Wp, halo
+
+
+def fuse_redundancy(grid_shape: tuple[int, int], fuse: int, r: int,
+                    block_h: int = 256) -> float:
+    """Rim-recompute factor of the depth-``fuse`` trapezoid: elements each
+    block touches divided by elements it owns.  1.0 means no redundant work;
+    the cost model multiplies compute time by this when pricing a fuse depth.
+    """
+    H, W = grid_shape
+    bh, _, Wp, halo = fused_block_geometry(H, W, fuse, r, block_h)
+    return ((bh + 2 * halo) * (Wp + 2 * halo)) / (bh * Wp)
+
+
 def halo_block_spec(
     block_shape: Sequence[int],
     index_map: Callable[..., tuple],

@@ -1,15 +1,10 @@
 """Halo-exchange edge semantics and boundary-mode equivalence, exercised
 through the unified ``stencil_apply`` dispatcher.
 
-Multi-device cases run in a subprocess with
-XLA_FLAGS=--xla_force_host_platform_device_count so the main pytest process
-keeps its single-device view (same pattern as tests/test_distributed.py).
+Multi-device cases run in a subprocess (the ``run_with_devices`` fixture
+from tests/conftest.py) with XLA_FLAGS=--xla_force_host_platform_device_count
+so the main pytest process keeps its single-device view.
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -23,21 +18,7 @@ from repro.core import (
     stencil_apply,
 )
 
-REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 RNG = np.random.default_rng(3)
-
-
-def run_with_devices(src: str, n: int = 8, timeout: int = 900) -> str:
-    code = (
-        "import os\n"
-        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={n}'\n"
-        f"import sys; sys.path.insert(0, {os.path.join(REPO, 'src')!r})\n"
-        + textwrap.dedent(src)
-    )
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=timeout)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
-    return r.stdout
 
 
 class TestBoundaryModeEquivalence:
@@ -93,8 +74,9 @@ class TestHaloSingleDevice:
         np.testing.assert_allclose(out, ref, atol=1e-5)
 
 
+@pytest.mark.slow
 class TestHaloMultiDevice:
-    def test_edge_permutes_deliver_zeros(self):
+    def test_edge_permutes_deliver_zeros(self, run_with_devices):
         # Non-wrapping ppermute: the halo a mesh-edge device receives from
         # "outside" the mesh must be zeros (the oracle's zero-pad semantics).
         out = run_with_devices("""
@@ -133,7 +115,7 @@ class TestHaloMultiDevice:
         """)
         assert "edge zeros ok" in out
 
-    def test_stencil_apply_halo_on_device_mesh(self):
+    def test_stencil_apply_halo_on_device_mesh(self, run_with_devices):
         out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import DirichletBC, jacobi_reference, laplace_jacobi
@@ -153,7 +135,7 @@ class TestHaloMultiDevice:
         """)
         assert "halo mesh ok" in out
 
-    def test_halo_support_rejects_untileable_grid(self):
+    def test_halo_support_rejects_untileable_grid(self, run_with_devices):
         out = run_with_devices("""
         import jax
         from repro.core import backend_support, laplace_jacobi

@@ -59,6 +59,7 @@ def _oracle(spec, x):
                                        ITERS) for i in range(x.shape[0])])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype_name", list(DTYPES))
 @pytest.mark.parametrize("mode", MODES, ids=lambda m: m.value)
 @pytest.mark.parametrize("backend", BACKENDS)

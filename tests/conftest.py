@@ -1,0 +1,35 @@
+"""Shared helpers for the test tree."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def run_with_devices():
+    """Run a Python snippet in a subprocess under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=n``.
+
+    The flag must be set before jax imports, and the main pytest process must
+    keep its single-device view — hence the subprocess.  Returns the
+    subprocess's stdout; asserts it exited cleanly.
+    """
+    def run(src: str, n: int = 8, timeout: int = 900) -> str:
+        code = (
+            "import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={n}'\n"
+            f"import sys; sys.path.insert(0, {os.path.join(REPO, 'src')!r})\n"
+            + textwrap.dedent(src)
+        )
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, timeout=timeout)
+        assert r.returncode == 0, \
+            f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+        return r.stdout
+
+    return run

@@ -1,0 +1,119 @@
+"""Cost-model regression tier: the roofline model's ordering must stay
+consistent with (a) the paper's §4 accounting and (b) the timings actually
+recorded on this host in ``BENCH_stencil.json`` — so silent roofline drift
+(constants edited, FLOP accounting broken, auto picking a regressed backend)
+gets caught by CI instead of by a slow benchmark run.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core import choose_backend, laplace_jacobi
+from repro.core.plan import DEVICE_PROFILES, estimate_seconds
+from repro.core.solver import select_fuse
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+BENCH_PATH = os.path.join(REPO, "BENCH_stencil.json")
+
+TABLE1_GRID = (64, 64)
+TABLE1_ITERS = 100
+
+
+def _load_bench() -> dict:
+    if not os.path.exists(BENCH_PATH):
+        pytest.skip("no BENCH_stencil.json recorded on this host "
+                    "(run scripts/ci.sh)")
+    with open(BENCH_PATH) as f:
+        data = json.load(f)
+    if "solver" not in data:
+        pytest.skip("BENCH_stencil.json predates the solver-metrics schema "
+                    "(schema >= 2); re-run scripts/ci.sh")
+    return data
+
+
+class TestRooflineModel:
+    """Analytic assertions — no recorded artifact needed."""
+
+    def test_dense_much_costlier_than_conv(self):
+        # Paper §4: 8191 vs 17 FLOPs/point, plus the N^2 matrix re-stream.
+        spec = laplace_jacobi(2)
+        cpu = DEVICE_PROFILES["cpu"]
+        dense = estimate_seconds("dense", spec, TABLE1_GRID, TABLE1_ITERS, cpu)
+        conv = estimate_seconds("conv", spec, TABLE1_GRID, TABLE1_ITERS, cpu)
+        assert dense > 10 * conv, (dense, conv)
+
+    def test_auto_picks_conv_for_fp32_table1_shape_on_cpu(self):
+        name, costs = choose_backend(laplace_jacobi(2), TABLE1_GRID,
+                                     iters=TABLE1_ITERS, device_kind="cpu")
+        assert name == "conv", costs
+
+    def test_fuse_depth_pricing_is_monotone_while_memory_bound(self):
+        # On the TPU profile a large 2D Jacobi is HBM-bound: each doubling of
+        # the fuse depth halves traffic and must price cheaper.
+        spec = laplace_jacobi(2)
+        tpu = DEVICE_PROFILES["tpu"]
+        ests = [estimate_seconds("pallas_fused", spec, (512, 512), 64, tpu,
+                                 fuse=f) for f in (1, 2, 4, 8)]
+        assert ests == sorted(ests, reverse=True), ests
+
+    def test_fuse_pricing_includes_rim_recompute(self):
+        # Deeper fusion is NOT free: compute time must grow with depth even
+        # as memory time shrinks (the trapezoid redundancy factor).
+        from repro.kernels.tiling import fuse_redundancy
+        r1 = fuse_redundancy((64, 64), 1, 1)
+        r8 = fuse_redundancy((64, 64), 8, 1)
+        assert 1.0 <= r1 < r8
+
+    def test_select_fuse_prefers_depth_on_tpu_not_on_cpu(self):
+        spec = laplace_jacobi(2)
+        # memory-bound TPU cell: fusion wins until rim recompute crosses the
+        # HBM saving (the model finds the crossover, not the deepest depth)
+        assert select_fuse("pallas_fused", spec, (512, 512), 16, "tpu") > 1
+        # compute-bound CPU cell: fusing only adds rim recompute
+        assert select_fuse("pallas", spec, (16, 16), 16, "cpu") == 1
+        # non-fusing backends and 3D kernels never fuse
+        assert select_fuse("conv", spec, (64, 64), 16, "cpu") is None
+        assert select_fuse("pallas", laplace_jacobi(3), (8, 16, 16), 16,
+                           "tpu") is None
+
+
+class TestRecordedTimings:
+    """Model vs the measured artifact this host last produced."""
+
+    def test_measured_dense_conv_ratio_matches_model_ordering(self):
+        solver = _load_bench()["solver"]
+        keys = {k for k in solver}
+        dense = next((solver[k] for k in keys if "dense/fp32" in k), None)
+        conv = next((solver[k] for k in keys if "/conv/fp32" in k), None)
+        if dense is None or conv is None:
+            pytest.skip("artifact lacks dense/conv fp32 solver rows")
+        measured_ratio = dense["s_per_iter"] / conv["s_per_iter"]
+        assert measured_ratio > 10, measured_ratio
+
+        spec = laplace_jacobi(2)
+        cpu = DEVICE_PROFILES["cpu"]
+        model_ratio = (
+            estimate_seconds("dense", spec, TABLE1_GRID, TABLE1_ITERS, cpu)
+            / estimate_seconds("conv", spec, TABLE1_GRID, TABLE1_ITERS, cpu))
+        assert model_ratio > 10, model_ratio
+
+    def test_recorded_auto_pick_matches_current_model(self):
+        data = _load_bench()
+        auto_keys = [k for k in data["us_per_call"] if "/auto=" in k]
+        if not auto_keys:
+            pytest.skip("artifact lacks an auto row")
+        recorded = auto_keys[0].split("auto=")[1].split("/")[0]
+        name, _ = choose_backend(laplace_jacobi(2), TABLE1_GRID,
+                                 iters=TABLE1_ITERS, device_kind="cpu")
+        assert recorded == name, (recorded, name)
+
+    def test_solver_rows_have_stable_schema(self):
+        data = _load_bench()
+        assert data.get("schema", 0) >= 2
+        for name, row in data["solver"].items():
+            assert {"mode", "iters", "s_per_iter"} <= set(row), (name, row)
+            assert row["iters"] >= 1
+            assert row["s_per_iter"] > 0
+            if row["mode"] == "converged":
+                assert {"residual", "converged", "backend"} <= set(row), name

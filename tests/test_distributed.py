@@ -1,47 +1,30 @@
-"""Distribution tests — these run in a subprocess with
+"""Distribution tests — these run in a subprocess (the ``run_with_devices``
+fixture from tests/conftest.py) with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main test process
 keeps its single-device view (per the assignment: only the dry-run forces
 fake devices).
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_with_devices(src: str, n: int = 8, timeout: int = 900) -> str:
-    code = (
-        "import os\n"
-        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={n}'\n"
-        f"import sys; sys.path.insert(0, {os.path.join(REPO, 'src')!r})\n"
-        + textwrap.dedent(src)
-    )
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=timeout)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
-    return r.stdout
+pytestmark = pytest.mark.slow
 
 
 class TestHaloExchange:
-    def test_distributed_jacobi_matches_reference(self):
+    def test_distributed_jacobi_matches_reference(self, run_with_devices):
+        # distributed stepping goes through the solve() entry point
+        # (fixed-iteration mode); the raw runner is core.distributed.
         out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core import laplace_jacobi, DirichletBC
-        from repro.core.distributed import make_distributed_jacobi
+        from repro.core import laplace_jacobi, DirichletBC, solve
         from repro.core.reference import jacobi_reference
 
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         spec = laplace_jacobi(2)
         H, W, iters, bcv = 16, 8, 5, 1.5
-        run = make_distributed_jacobi(mesh, spec, H=H, W=W, bc_value=bcv,
-                                      iterations=iters)
         rng = np.random.default_rng(0)
         x0 = jnp.asarray(rng.standard_normal((2, H, W)), jnp.float32)
-        out = run(x0)
+        out = solve(spec, x0, backend="halo", mesh=mesh, bc=bcv,
+                    rtol=None, atol=None, max_iters=iters).x
         bc = DirichletBC(bcv)
         ref = jnp.stack([jacobi_reference(x0[i], spec, bc, iters)
                          for i in range(2)])
@@ -51,21 +34,20 @@ class TestHaloExchange:
         """)
         assert "halo ok" in out
 
-    def test_distributed_9point(self):
+    def test_distributed_9point(self, run_with_devices):
         out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core import box, DirichletBC
-        from repro.core.distributed import make_distributed_jacobi
+        from repro.core import box, DirichletBC, solve
         from repro.core.reference import jacobi_reference
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         spec = box(2)   # 9-point: corners must ride the two-phase exchange
-        run = make_distributed_jacobi(mesh, spec, H=8, W=16, bc_value=0.5,
-                                      iterations=3)
         rng = np.random.default_rng(1)
         x0 = jnp.asarray(rng.standard_normal((1, 8, 16)), jnp.float32)
+        out = solve(spec, x0, backend="halo", mesh=mesh, bc=0.5,
+                    rtol=None, atol=None, max_iters=3).x
         ref = jnp.stack([jacobi_reference(x0[0], spec, DirichletBC(0.5), 3)])
-        err = float(jnp.abs(run(x0) - ref).max())
+        err = float(jnp.abs(out - ref).max())
         assert err < 1e-5, err
         print("box ok")
         """)
@@ -73,7 +55,7 @@ class TestHaloExchange:
 
 
 class TestPipeline:
-    def test_gpipe_matches_sequential_and_grads(self):
+    def test_gpipe_matches_sequential_and_grads(self, run_with_devices):
         out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.parallel.pipeline import gpipe, split_stages
@@ -114,7 +96,7 @@ class TestPipeline:
 
 
 class TestShardedTraining:
-    def test_tp_training_matches_single_device(self):
+    def test_tp_training_matches_single_device(self, run_with_devices):
         out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
@@ -151,7 +133,7 @@ class TestShardedTraining:
         """)
         assert "tp ok" in out
 
-    def test_sp_profile_matches_single_device(self):
+    def test_sp_profile_matches_single_device(self, run_with_devices):
         out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
@@ -178,7 +160,7 @@ class TestShardedTraining:
         """)
         assert "sp ok" in out
 
-    def test_decode_with_sharded_cache(self):
+    def test_decode_with_sharded_cache(self, run_with_devices):
         out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
