@@ -1,0 +1,87 @@
+"""Multigrid benchmark: V-cycle cost and total-work reduction vs Jacobi.
+
+Runs the paper's Table-1 solve (64x64 Laplace, Dirichlet walls, iterate to
+the relative-residual target) two ways through the same dispatcher — the
+single-level Jacobi time loop (``core.solver.solve``, the paper-faithful
+pipeline) and the geometric-multigrid V-cycle (``core.multigrid``) — and
+reports the currency the acceptance criterion is written in: *fine-grid work
+units* (one unit = one stencil sweep over the finest grid, so one Jacobi
+iteration costs exactly 1).  A variable-coefficient solve rides along to
+price the per-cell-weight-field path.
+
+``run`` returns (csv rows, metrics dict); metric keys are ``multigrid/...``
+and land in BENCH_stencil.json's ``multigrid`` section (schema 3).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Multigrid, heterogeneous_jacobi, laplace_jacobi, solve
+
+from benchmarks.common import csv_row
+
+
+def _mg_metric(res, jacobi_iters=None):
+    m = {
+        "cycles": int(res.cycles),
+        "s_per_cycle": float(res.wall_seconds / max(res.cycles, 1)),
+        "work_units": float(res.work_units),
+        "work_per_cycle": float(res.work_per_cycle),
+        "levels": len(res.level_shapes),
+        "backend": res.backend,
+        "residual": float(res.residual),
+        "converged": bool(res.converged),
+    }
+    if jacobi_iters is not None:
+        m["jacobi_iters"] = int(jacobi_iters)
+        m["work_ratio_vs_jacobi"] = float(jacobi_iters / max(res.work_units,
+                                                             1e-9))
+    return m
+
+
+def run(rtol: float = 1e-6, grid=(64, 64), max_iters: int = 20_000):
+    rows = []
+    metrics: dict[str, dict] = {}
+    spec = laplace_jacobi(2)
+    x0 = jnp.zeros(grid, jnp.float32)
+
+    # Single-level Jacobi baseline: the paper's run-to-convergence solve.
+    jac = solve(spec, x0, bc=1.0, rtol=rtol, check_every=20,
+                max_iters=max_iters)
+
+    # The V-cycle on the identical problem and convergence criterion.
+    mg = Multigrid(spec, grid, bc=1.0, rtol=rtol)
+    mg.solve(x0)                # compile outside the reported wall time
+    res = mg.solve(x0)
+    name = f"multigrid/table1-{grid[0]}x{grid[1]}/vcycle"
+    ratio = jac.iterations / max(res.work_units, 1e-9)
+    rows.append(csv_row(
+        name, res.wall_seconds,
+        f"cycles={res.cycles} work={res.work_units:.0f} units vs "
+        f"jacobi={jac.iterations} iters ({ratio:.1f}x less work) "
+        f"residual={res.residual:.1e} converged={res.converged}"))
+    metrics[name] = _mg_metric(res, jacobi_iters=jac.iterations)
+
+    # Variable-coefficient solve: per-cell weight fields through the same
+    # hierarchy (odd grid — every level boundary is coarse-representable).
+    rng = np.random.default_rng(0)
+    n = 65
+    kappa = 1.0 + 9.0 * rng.random((n, n)).astype(np.float32)
+    hspec = heterogeneous_jacobi(kappa)
+    hmg = Multigrid(hspec, (n, n), bc=1.0, rtol=rtol)
+    hmg.solve(jnp.zeros((n, n), jnp.float32))
+    hres = hmg.solve(jnp.zeros((n, n), jnp.float32))
+    name = f"multigrid/hetero-{n}x{n}/vcycle"
+    rows.append(csv_row(
+        name, hres.wall_seconds,
+        f"cycles={hres.cycles} work={hres.work_units:.0f} units "
+        f"backend={hres.backend} residual={hres.residual:.1e} "
+        f"converged={hres.converged}"))
+    metrics[name] = _mg_metric(hres)
+    return rows, metrics
+
+
+if __name__ == "__main__":
+    for r in run()[0]:
+        print(r)

@@ -2,18 +2,26 @@
 Prints ``name,us_per_call,derived`` CSV rows and (with ``--json``) writes a
 machine-readable artifact so the perf trajectory is trackable across commits.
 
-JSON schema (stable, version 2):
+JSON schema (stable, version 3):
 
-  {"schema": 2,
+  {"schema": 3,
    "us_per_call": {row name: microseconds per timed call},
    "solver":      {row name: {"mode": "fixed"|"converged",
                               "iters": int, "s_per_iter": float,
                               # converged rows additionally carry:
                               "backend": str, "residual": float,
-                              "converged": bool}}}
+                              "converged": bool}},
+   "multigrid":   {row name: {"cycles": int, "s_per_cycle": float,
+                              "work_units": float, "work_per_cycle": float,
+                              "levels": int, "backend": str,
+                              "residual": float, "converged": bool,
+                              # rows with a Jacobi baseline additionally:
+                              "jacobi_iters": int,
+                              "work_ratio_vs_jacobi": float}}}
 
-Sections may return either a list of CSV rows or (rows, solver-metrics
-dict); the metrics land in the ``solver`` section.
+Sections may return either a list of CSV rows or (rows, metrics dict);
+metric keys starting with ``multigrid/`` land in the ``multigrid`` section,
+everything else in ``solver``.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only table1_2d ...]
                                           [--json BENCH_stencil.json]
@@ -32,6 +40,7 @@ _ALIASES = {
     "fig5_shapes": "fig5",
     "fig6_3d": "fig6",
     "stencil_fuse_sweep": "stencil-fuse",
+    "multigrid_bench": "multigrid",
 }
 
 
@@ -41,12 +50,12 @@ def main() -> int:
                     help="smaller step counts (CI)")
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write the schema-2 JSON artifact "
-                         "({schema, us_per_call, solver})")
+                    help="also write the schema-3 JSON artifact "
+                         "({schema, us_per_call, solver, multigrid})")
     args = ap.parse_args()
     only = ({_ALIASES.get(o, o) for o in args.only} if args.only else None)
 
-    from benchmarks import (fig5_shapes, fig6_3d, roofline,
+    from benchmarks import (fig5_shapes, fig6_3d, multigrid_bench, roofline,
                             stencil_fuse_sweep, table1_2d)
 
     sections = {
@@ -56,6 +65,8 @@ def main() -> int:
         "fig6": lambda: fig6_3d.run(iters=10 if args.fast else 50),
         "stencil-fuse": stencil_fuse_sweep.run,
         "roofline": roofline.run,
+        "multigrid": lambda: multigrid_bench.run(
+            rtol=1e-5 if args.fast else 1e-6),
     }
     failed = 0
     if only:
@@ -66,6 +77,7 @@ def main() -> int:
             failed += len(unknown)
     results: dict[str, float] = {}
     solver_metrics: dict[str, dict] = {}
+    mg_metrics: dict[str, dict] = {}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:
@@ -74,7 +86,9 @@ def main() -> int:
             out = fn()
             if isinstance(out, tuple):
                 rows, metrics = out
-                solver_metrics.update(metrics)
+                for k, v in metrics.items():
+                    (mg_metrics if k.startswith("multigrid/")
+                     else solver_metrics)[k] = v
             else:
                 rows = out
             for row in rows:
@@ -95,12 +109,13 @@ def main() -> int:
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
     if args.json:
-        payload = {"schema": 2, "us_per_call": results,
-                   "solver": solver_metrics}
+        payload = {"schema": 3, "us_per_call": results,
+                   "solver": solver_metrics, "multigrid": mg_metrics}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {len(results)} timing rows + {len(solver_metrics)} "
-              f"solver rows to {args.json}", file=sys.stderr)
+              f"solver rows + {len(mg_metrics)} multigrid rows to "
+              f"{args.json}", file=sys.stderr)
     return 1 if failed else 0
 
 

@@ -7,8 +7,8 @@
 #   scripts/ci.sh --all    full tier: every test (matrix + solver +
 #                          distributed) + the table1/fig6 benchmark sections
 #
-# Both tiers refresh BENCH_stencil.json (schema 2: us_per_call + solver
-# metrics) so the perf trajectory and the cost-model regression tests in
+# Both tiers refresh BENCH_stencil.json (schema 3: us_per_call + solver +
+# multigrid metrics) so the perf trajectory and the cost-model regression tests in
 # tests/solver/test_cost_model.py stay anchored to this host.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -18,11 +18,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--all" ]]; then
   echo "== full test suite (matrix + solver + distributed tiers) =="
   python -m pytest -x -q
-  echo "== stencil benchmark (table1 + fig6, with solver metrics) =="
-  python -m benchmarks.run --only table1_2d fig6_3d --json BENCH_stencil.json
+  echo "== stencil benchmark (table1 + fig6 + multigrid) =="
+  python -m benchmarks.run --only table1_2d fig6_3d multigrid --json BENCH_stencil.json
 else
   echo "== fast test tier (-m 'not slow') =="
   python -m pytest -x -q -m "not slow"
   echo "== stencil benchmark (fast) =="
-  python -m benchmarks.run --fast --only table1_2d --json BENCH_stencil.json
+  python -m benchmarks.run --fast --only table1_2d multigrid --json BENCH_stencil.json
 fi

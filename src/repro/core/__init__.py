@@ -16,6 +16,13 @@ The time dimension lives in ``solver.py``: ``solve(spec, x0, ...)`` /
 program over any backend (batched per-instance convergence, distributed
 halo-exchange stepping, roofline-selected temporal fusion); pinned down in
 tests/solver/.
+
+``multigrid.py`` composes those pieces into a geometric-multigrid V-cycle:
+per-level smoothing plans, restriction/prolongation as ``StencilSpec``s, and
+red-black Gauss-Seidel — ``multigrid_solve`` reaches the same fixed point as
+``solve`` in a small constant number of fine-grid-equivalent sweeps.
+Variable-coefficient operators (per-cell ``WeightField`` taps, e.g.
+``heterogeneous_jacobi``) flow through the same spec/backend machinery.
 """
 from repro.core.boundary import BoundaryMode, DirichletBC
 from repro.core.conv1d import causal_conv1d, causal_conv1d_update
@@ -26,6 +33,8 @@ from repro.core.conv_encoding import (
     conv_jacobi_2d,
     conv_jacobi_3d_channels,
     conv_jacobi_3d_native,
+    conv_var_jacobi,
+    split_var_kernels,
 )
 from repro.core.dense_encoding import (
     build_dense_matrix,
@@ -34,6 +43,16 @@ from repro.core.dense_encoding import (
     dense_layer_bytes,
 )
 from repro.core.metrics import DeliveredPerf, encoding_flops_per_point
+from repro.core.multigrid import (
+    MGResult,
+    Multigrid,
+    coarse_shape,
+    coarsen_spec,
+    multigrid_solve,
+    prolongation_spec,
+    red_black_step,
+    restriction_spec,
+)
 from repro.core.plan import (
     BACKENDS,
     BackendSupport,
@@ -47,10 +66,13 @@ from repro.core.reference import apply_stencil, jacobi_reference, jacobi_step
 from repro.core.solver import SolveResult, Solver, solve
 from repro.core.stencil import (
     StencilSpec,
+    WeightField,
     box,
     causal_conv1d_spec,
+    heterogeneous_jacobi,
     laplace_jacobi,
     star,
+    variable_coefficient,
 )
 
 __all__ = [
@@ -58,10 +80,13 @@ __all__ = [
     "BackendSupport",
     "BoundaryMode",
     "DirichletBC",
+    "MGResult",
+    "Multigrid",
     "SolveResult",
     "Solver",
     "StencilPlan",
     "StencilSpec",
+    "WeightField",
     "solve",
     "apply_stencil",
     "backend_support",
@@ -73,19 +98,29 @@ __all__ = [
     "causal_conv1d",
     "causal_conv1d_spec",
     "causal_conv1d_update",
+    "coarse_shape",
+    "coarsen_spec",
     "conv2d_kernel",
     "conv3d_channels_kernel",
     "conv3d_kernel",
     "conv_jacobi_2d",
     "conv_jacobi_3d_channels",
     "conv_jacobi_3d_native",
+    "conv_var_jacobi",
     "dense_jacobi",
     "dense_jacobi_with_bc",
     "dense_layer_bytes",
     "DeliveredPerf",
     "encoding_flops_per_point",
+    "heterogeneous_jacobi",
     "jacobi_reference",
     "jacobi_step",
     "laplace_jacobi",
+    "multigrid_solve",
+    "prolongation_spec",
+    "red_black_step",
+    "restriction_spec",
+    "split_var_kernels",
     "star",
+    "variable_coefficient",
 ]

@@ -12,6 +12,14 @@ kernel[z_out, z_out+dz, 1+dx, 1+dy] = w — a banded Z_out×Z_in channel-mixing
 matrix.  Z_out=Z_in=Z keeps the output 3D (Figure 4).  The band is dense in
 storage: Z²·9 weights instead of 7, overhead we quantify against native 3D
 conv in EXPERIMENTS §Perf.
+
+Variable coefficients: a conv kernel is spatially invariant, so per-cell
+weight fields cannot live *in* the kernel — but they can ride the same
+tensor-op vocabulary via the *gather trick*: a one-hot kernel (one output
+channel per varying tap) extracts each neighbour into a channel, and the
+per-cell fields apply as an elementwise multiply-and-reduce over channels
+(the same mul+add shape as the paper's mask trick).  Scalar taps stay in an
+ordinary conv kernel, so a mixed spec costs one conv plus one gather.
 """
 from __future__ import annotations
 
@@ -22,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.boundary import BoundaryMode, DirichletBC
-from repro.core.stencil import StencilSpec
+from repro.core.stencil import StencilSpec, WeightField
 
 
 # ---------------------------------------------------------------------------
@@ -110,6 +118,11 @@ def conv3d_channels_kernel(spec: StencilSpec, depth: int, dtype=np.float32) -> n
     """
     if spec.ndim != 3:
         raise ValueError("conv3d_channels_kernel needs a 3D spec")
+    if spec.is_variable:
+        raise ValueError(
+            "the channels-trick Conv2D shares its band weights across the "
+            "whole X-Y plane; per-cell weight fields are not expressible — "
+            "use conv3d_native, dense, or pallas")
     fz, fx, fy = spec.footprint
     lo = [min(off[d] for off, _ in spec.taps) for d in range(3)]
     ker = np.zeros((depth, depth, fx, fy), dtype=dtype)
@@ -192,4 +205,94 @@ def conv_jacobi_3d_native(
     mask = bc.interior_mask(grid, dtype)[None, None]
     bcg = bc.bc_grid(grid, dtype)[None, None]
     out = _conv_jacobi_3d_native(x, kernel, mask, bcg, iterations)
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Variable-coefficient gather trick (2D conv and native 3D conv)
+# ---------------------------------------------------------------------------
+
+def split_var_kernels(spec: StencilSpec, dtype=np.float32):
+    """Split a (possibly mixed) spec into conv-friendly pieces.
+
+    Returns ``(scalar_kernel, gather_kernel, fields)``:
+
+      scalar_kernel  (1, 1, *footprint) holding the constant taps (zeros if
+                     every tap varies);
+      gather_kernel  (V, 1, *footprint), one one-hot output channel per
+                     varying tap — the conv that extracts each neighbour;
+      fields         (V, *grid) stacked per-cell weight fields, in the same
+                     channel order as ``gather_kernel``.
+    """
+    lo = [min(off[d] for off, _ in spec.taps) for d in range(spec.ndim)]
+    fp = spec.footprint
+    scalar = np.zeros((1, 1) + fp, dtype=dtype)
+    onehots, fields = [], []
+    for off, w in spec.taps:
+        idx = tuple(o - l for o, l in zip(off, lo))
+        if isinstance(w, WeightField):
+            oh = np.zeros((1,) + fp, dtype=dtype)
+            oh[(0,) + idx] = 1.0
+            onehots.append(oh)
+            fields.append(w.array)
+        else:
+            scalar[(0, 0) + idx] += w
+    gather = np.stack(onehots) if onehots else np.zeros((0, 1) + fp, dtype)
+    flds = (np.stack(fields).astype(dtype) if fields
+            else np.zeros((0,) + (spec.weights_shape or ()), dtype))
+    return scalar, gather, flds
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "ndim"))
+def _conv_var_jacobi(x, scalar_k, gather_k, fields, mask, bc_grid,
+                     iterations, ndim):
+    if ndim == 2:
+        apply_ = conv2d_apply
+    else:
+        def apply_(v, k):
+            return jax.lax.conv_general_dilated(
+                v, k.astype(v.dtype), (1, 1, 1), "SAME",
+                dimension_numbers=("NCDHW", "OIDHW", "NCDHW"),
+                preferred_element_type=jnp.float32,
+            ).astype(v.dtype)
+
+    def body(x, _):
+        y = apply_(x, scalar_k)
+        g = apply_(x, gather_k)                       # (B, V, *grid)
+        y = y + jnp.sum(g * fields[None], axis=1, keepdims=True)
+        y = y * mask + bc_grid
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, None, length=iterations)
+    return x
+
+
+def conv_var_jacobi(
+    x0: jnp.ndarray,
+    spec: StencilSpec,
+    bc: DirichletBC,
+    iterations: int,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Variable-coefficient Jacobi via the gather trick (MASK boundary mode).
+
+    2D runs through Conv2D (NCHW); 3D through native Conv3D (NCDHW) — the
+    channels-trick 3D path cannot express per-cell fields (its band weights
+    are shared across the plane), which ``backend_support`` reports as a
+    reasoned skip.  x0: (batch, *grid) → (batch, *grid).
+    """
+    if spec.ndim not in (2, 3):
+        raise ValueError("conv gather trick supports 2D and 3D specs")
+    grid = x0.shape[1:]
+    if spec.weights_shape != grid:
+        raise ValueError(
+            f"spec {spec.name} carries {spec.weights_shape}-shaped weight "
+            f"fields but the grid is {grid}")
+    scalar_k, gather_k, fields = split_var_kernels(spec)
+    x = jax.vmap(bc.set_boundary)(x0.astype(dtype))[:, None]
+    mask = bc.interior_mask(grid, dtype)[None, None]
+    bcg = bc.bc_grid(grid, dtype)[None, None]
+    out = _conv_var_jacobi(
+        x, jnp.asarray(scalar_k, dtype), jnp.asarray(gather_k, dtype),
+        jnp.asarray(fields, dtype), mask, bcg, iterations, spec.ndim)
     return out[:, 0]

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.boundary import DirichletBC
-from repro.core.stencil import StencilSpec
+from repro.core.stencil import StencilSpec, WeightField
 
 
 def build_dense_matrix(
@@ -34,10 +34,16 @@ def build_dense_matrix(
 
     Matches Figure 1 of the paper for 2D Laplace with X=Y=3: the only
     non-identity row is the interior cell, holding 0.25 at its four
-    neighbours.
+    neighbours.  Variable-coefficient taps fold in for free: the matrix
+    column for output cell ``i`` holds ``w_k(i)`` — spatial variation costs
+    the dense encoding nothing, the paper's argument for it taken further.
     """
     if spec.ndim != len(grid_shape):
         raise ValueError(f"spec is {spec.ndim}D but grid is {len(grid_shape)}D")
+    if spec.is_variable and spec.weights_shape != tuple(grid_shape):
+        raise ValueError(
+            f"spec {spec.name} carries {spec.weights_shape}-shaped weight "
+            f"fields but the grid is {tuple(grid_shape)}")
     n = int(np.prod(grid_shape))
     w = np.zeros((n, n), dtype=dtype)
     interior = np.zeros(grid_shape, dtype=bool)
@@ -58,7 +64,10 @@ def build_dense_matrix(
                 # (without this check a negative index silently wraps).
                 continue
             flat_j = int(np.dot(nbr, strides))
-            w[flat_j, flat_i] += weight  # column = output, row = input (x @ W)
+            # column = output, row = input (x @ W); per-cell fields are
+            # indexed at the output cell
+            wv = weight.array[idx] if isinstance(weight, WeightField) else weight
+            w[flat_j, flat_i] += wv
     return w
 
 

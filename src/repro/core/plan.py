@@ -86,9 +86,15 @@ def backend_support(
         return _no(f"unknown backend {backend!r} (known: {BACKENDS})")
     nd = spec.ndim
     raw = bc is None
+    variable = spec.is_variable
     scalar_bc = raw or isinstance(bc, (int, float)) or (
         isinstance(bc, DirichletBC) and isinstance(bc.value, (int, float))
     )
+
+    if variable and grid_shape is not None and \
+            spec.weights_shape != tuple(grid_shape):
+        return _no(f"spec carries {spec.weights_shape}-shaped weight fields "
+                   f"but the grid is {tuple(grid_shape)}")
 
     if backend == "reference":
         return _OK  # the oracle runs everywhere; mode is a no-op for it
@@ -100,17 +106,24 @@ def backend_support(
         if mode is not BoundaryMode.MATRIX:
             return _no("dense encoding applies BCs as identity matrix rows "
                        "(BoundaryMode.MATRIX only)")
-        return _OK
+        return _OK  # per-cell fields fold into the matrix columns for free
 
     if backend == "conv":
         if nd == 1:
             return _no("no 1D conv encoding (use dense or reference)")
+        if variable and nd == 3:
+            return _no("channels-trick Conv2D shares its band weights across "
+                       "the X-Y plane; per-cell weight fields not "
+                       "expressible (use conv3d_native, dense, or pallas)")
         if nd == 3 and mode is not BoundaryMode.MASK:
             return _no("3D channels-trick conv supports the mask trick only")
         if raw:
             return _no("conv encoding paths bake in the Dirichlet fixup")
         if mode is BoundaryMode.MATRIX:
             return _no("MATRIX mode is the dense encoding's BC scheme")
+        if variable and mode is not BoundaryMode.MASK:
+            return _no("the variable-coefficient gather trick bakes in the "
+                       "mask fixup (BoundaryMode.MASK only)")
         if mode is BoundaryMode.PAD and spec.radius != 1:
             return _no("BoundaryMode.PAD reconstructs the shell only for "
                        "radius-1 stencils")
@@ -123,9 +136,13 @@ def backend_support(
             return _no("conv encoding paths bake in the Dirichlet fixup")
         if mode is not BoundaryMode.MASK:
             return _no("conv3d_native supports the mask trick only")
-        return _OK
+        return _OK  # variable taps ride the gather trick (one-hot channels)
 
     if backend in ("pallas", "pallas_fused"):
+        if backend == "pallas_fused" and variable:
+            return _no("temporal fusion would need halo-replicated per-cell "
+                       "weight fields; variable-coefficient specs run the "
+                       "direct pallas kernel instead")
         if backend == "pallas_fused" and nd != 2:
             return _no("temporal fusion kernel is 2D only (jacobi_fused.py)")
         if nd not in (2, 3):
@@ -141,6 +158,9 @@ def backend_support(
     if backend == "halo":
         if nd != 2:
             return _no("halo-exchange distribution is 2D (distributed.py)")
+        if variable:
+            return _no("per-cell weight fields are not sharded across the "
+                       "device mesh yet (single-device backends only)")
         if raw:
             return _no("distributed jacobi bakes in the Dirichlet fixup")
         if mode is not BoundaryMode.MASK:
@@ -226,14 +246,22 @@ def estimate_seconds(
     callers (the solver's fuse auto-selection) compare candidate depths.
     """
     n = int(np.prod(grid_shape))
-    stream = 2 * n * itemsize  # read + write the grid once per iteration
+    n_var = spec.num_variable_taps
+    # Read + write the grid once per iteration; per-cell weight fields add
+    # one grid-sized read per varying tap on every streaming backend.
+    stream = (2 + n_var) * n * itemsize
 
     if backend == "dense":
         flops = encoding_flops_per_point(spec, "dense", n_total=n)
         compute = flops * n / device.matmul_flops
-        mem = (n * n * itemsize + stream) / device.mem_bw  # matrix re-streams
+        # The fields are baked into the matrix, which re-streams anyway.
+        mem = (n * n * itemsize + 2 * n * itemsize) / device.mem_bw
     elif backend in ("conv", "conv3d_native"):
-        if spec.ndim == 3 and backend == "conv":
+        if spec.is_variable:
+            # Gather trick: direct-form MACs for the one-hot conv plus an
+            # elementwise multiply + add + reduce per varying tap.
+            flops = encoding_flops_per_point(spec, "direct") + 3 * n_var
+        elif spec.ndim == 3 and backend == "conv":
             flops = encoding_flops_per_point(spec, "conv3d_channels",
                                              n_total=grid_shape[0])
         else:
@@ -400,6 +428,10 @@ def make_plan(
     """
     if spec.ndim != len(grid_shape):
         raise ValueError(f"spec is {spec.ndim}D but grid is {len(grid_shape)}D")
+    if spec.is_variable and spec.weights_shape != tuple(grid_shape):
+        raise ValueError(
+            f"spec carries {spec.weights_shape}-shaped weight fields but the "
+            f"grid is {tuple(grid_shape)}")
     if iters < 1:
         raise ValueError("iters must be >= 1")
     bc = _as_bc(bc)
@@ -417,8 +449,9 @@ def make_plan(
     # ``fuse`` is a hint for the 2D Pallas paths (both scalar-bc and raw
     # execute in fuse-sized chunks); every other backend ignores it and the
     # plan records fuse=1 so its metadata reflects what actually runs.
-    fusing = backend == "pallas_fused" or (backend == "pallas"
-                                           and spec.ndim == 2)
+    fusing = (backend == "pallas_fused" or (backend == "pallas"
+                                            and spec.ndim == 2)) \
+        and not spec.is_variable
     if not fusing:
         fuse = 1
     elif fuse is None:
@@ -457,7 +490,10 @@ def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
 
     if backend == "conv":
         from repro.core.conv_encoding import (conv_jacobi_2d,
-                                              conv_jacobi_3d_channels)
+                                              conv_jacobi_3d_channels,
+                                              conv_var_jacobi)
+        if spec.is_variable:
+            return lambda x: conv_var_jacobi(x, spec, bc, iters, dtype=dtype)
         if spec.ndim == 2:
             return lambda x: conv_jacobi_2d(x, spec, bc, iters, mode,
                                             dtype=dtype)
@@ -465,7 +501,10 @@ def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
                                                  dtype=dtype)
 
     if backend == "conv3d_native":
-        from repro.core.conv_encoding import conv_jacobi_3d_native
+        from repro.core.conv_encoding import (conv_jacobi_3d_native,
+                                              conv_var_jacobi)
+        if spec.is_variable:
+            return lambda x: conv_var_jacobi(x, spec, bc, iters, dtype=dtype)
         return lambda x: conv_jacobi_3d_native(x, spec, bc, iters, dtype=dtype)
 
     if backend in ("pallas", "pallas_fused"):
@@ -489,6 +528,15 @@ def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
             return lambda x: jacobi2d(x.astype(dtype), spec, bc_value=bc_value,
                                       iterations=iters, fuse=fuse,
                                       interpret=interpret)
+        if spec.is_variable:
+            from repro.kernels import stencil2d
+
+            def run_raw2d_var(x):
+                def body(t, _):
+                    return stencil2d(t, spec, interpret=interpret), None
+                y, _ = jax.lax.scan(body, x.astype(dtype), None, length=iters)
+                return y
+            return run_raw2d_var
         from repro.kernels import jacobi2d_fused_step
 
         def run_raw2d(x):

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.boundary import DirichletBC
-from repro.core.stencil import StencilSpec
+from repro.core.stencil import StencilSpec, WeightField
 
 
 def _shift(x: jnp.ndarray, offset: tuple[int, ...]) -> jnp.ndarray:
@@ -33,10 +33,24 @@ def _shift(x: jnp.ndarray, offset: tuple[int, ...]) -> jnp.ndarray:
 
 
 def apply_stencil(x: jnp.ndarray, spec: StencilSpec) -> jnp.ndarray:
-    """One raw stencil application with zero (implicit) padding outside."""
+    """One raw stencil application with zero (implicit) padding outside.
+
+    Scalar taps contribute ``w * shift(x, off)``; per-cell weight fields
+    contribute ``w[i] * x[i + off]`` (the field is indexed at the *output*
+    cell) — this is the oracle the variable-coefficient conformance cells
+    cross-check every encoding against.
+    """
+    if spec.is_variable and spec.weights_shape != x.shape:
+        raise ValueError(
+            f"spec {spec.name} carries {spec.weights_shape}-shaped weight "
+            f"fields but the grid is {x.shape}")
     acc = jnp.zeros_like(x)
     for off, w in spec.taps:
-        acc = acc + jnp.asarray(w, x.dtype) * _shift(x, off)
+        if isinstance(w, WeightField):
+            wt = jnp.asarray(w.array, x.dtype)
+        else:
+            wt = jnp.asarray(w, x.dtype)
+        acc = acc + wt * _shift(x, off)
     return acc
 
 

@@ -103,7 +103,8 @@ def select_fuse(backend: str, spec: StencilSpec, grid_shape: tuple[int, ...],
     plan records fuse=1).  Candidates must divide ``check_every`` so chunk
     boundaries land on whole fused passes.
     """
-    if backend not in ("pallas", "pallas_fused") or spec.ndim != 2:
+    if backend not in ("pallas", "pallas_fused") or spec.ndim != 2 \
+            or spec.is_variable:
         return None
     if device_kind is None:
         device_kind = jax.default_backend()

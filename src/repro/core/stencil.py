@@ -8,7 +8,10 @@ example is the Jacobi update for Laplace's equation for diffusion:
   3D (7-point):  out[i,j,k] = (1/6)*(six face neighbours)
 
 ``StencilSpec`` is dimension-agnostic: offsets are integer tuples, weights are
-floats.  Encodings (dense / conv / Pallas kernels) consume the same spec, so
+floats *or per-cell weight fields* (``WeightField``) for variable-coefficient
+operators — the CFD/seismic workloads the wafer-scale papers target, where
+``out[i] = sum_k w_k(i) * x[i + off_k]`` and each ``w_k`` is a grid-shaped
+array.  Encodings (dense / conv / Pallas kernels) consume the same spec, so
 every backend computes the same operator and can be cross-validated.
 """
 from __future__ import annotations
@@ -21,35 +24,134 @@ import numpy as np
 Offset = tuple[int, ...]
 
 
+class WeightField:
+    """A per-cell weight array wrapped to stay hashable (jit-static safe).
+
+    ``StencilSpec`` instances are used as dict keys and static jit arguments,
+    so raw ndarrays cannot live in ``taps`` directly.  The wrapper freezes the
+    array (read-only, float32) and hashes its bytes once; equality compares
+    the actual values, so two specs built from equal fields still coincide.
+    """
+
+    __slots__ = ("array", "_hash")
+
+    def __init__(self, array):
+        arr = np.asarray(array, dtype=np.float32)
+        if arr.ndim == 0:
+            raise ValueError("WeightField needs an array, not a scalar "
+                             "(pass plain floats for constant taps)")
+        arr = arr.copy()
+        arr.setflags(write=False)
+        object.__setattr__(self, "array", arr)
+        object.__setattr__(self, "_hash",
+                           hash((arr.shape, arr.tobytes())))
+
+    def __setattr__(self, name, value):
+        raise AttributeError("WeightField is immutable")
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.array.shape
+
+    @property
+    def ndim(self) -> int:
+        return self.array.ndim
+
+    def __hash__(self):
+        return self._hash
+
+    def __eq__(self, other):
+        return (isinstance(other, WeightField)
+                and self.array.shape == other.array.shape
+                and np.array_equal(self.array, other.array))
+
+    def __repr__(self):
+        return f"WeightField(shape={self.array.shape})"
+
+
+def _canon_weight(off: Offset, w) -> "float | WeightField":
+    """Scalar-like weights become floats; array-like become WeightFields."""
+    if isinstance(w, WeightField):
+        return w
+    if isinstance(w, (list, tuple, np.ndarray)) or (
+            hasattr(w, "ndim") and getattr(w, "ndim", 0) > 0):
+        return WeightField(np.asarray(w))
+    try:
+        return float(w)
+    except (TypeError, ValueError) as e:
+        raise ValueError(
+            f"malformed weight for offset {off}: {w!r} is neither a scalar "
+            f"nor an array-like per-cell weight field") from e
+
+
 @dataclasses.dataclass(frozen=True)
 class StencilSpec:
     """A fixed neighbourhood-weight pattern.
 
     Attributes:
       taps: tuple of (offset, weight) pairs — offset is an integer tuple (one
-        entry per grid dim), weight the float contribution of that neighbour.
-        A Mapping may be passed at construction; it is canonicalized to a
-        sorted tuple so the spec is hashable (jit-static).
+        entry per grid dim), weight the contribution of that neighbour: a
+        float for constant-coefficient taps or a grid-shaped array
+        (``WeightField``) for spatially-varying taps.  A Mapping may be
+        passed at construction; it is canonicalized to a tuple sorted by
+        offset so the spec is hashable (jit-static).
       name: for reporting.
     """
 
-    taps: tuple[tuple[Offset, float], ...]
+    taps: tuple[tuple[Offset, "float | WeightField"], ...]
     name: str = "stencil"
 
     def __post_init__(self):
         taps = self.taps
         if isinstance(taps, Mapping):
-            taps = tuple(sorted((tuple(o), float(w)) for o, w in taps.items()))
+            pairs = taps.items()
         else:
-            taps = tuple(sorted((tuple(o), float(w)) for o, w in taps))
+            pairs = taps
+        canon = []
+        for o, w in pairs:
+            off = tuple(int(c) for c in o)
+            canon.append((off, _canon_weight(off, w)))
+        taps = tuple(sorted(canon, key=lambda t: t[0]))
         object.__setattr__(self, "taps", taps)
+        if not self.taps:
+            raise ValueError(f"{self.name}: a stencil needs at least one tap")
         ndims = {len(o) for o, _ in self.taps}
         if len(ndims) != 1:
             raise ValueError(f"inconsistent offset ranks in {self.name}: {ndims}")
+        nd = next(iter(ndims))
+        shapes = {w.shape for _, w in self.taps if isinstance(w, WeightField)}
+        for off, w in self.taps:
+            if isinstance(w, WeightField) and w.ndim != nd:
+                raise ValueError(
+                    f"{self.name}: weight field for offset {off} has rank "
+                    f"{w.ndim} (shape {w.shape}) but the stencil is {nd}D — "
+                    f"per-cell fields must be grid-shaped")
+        if len(shapes) > 1:
+            raise ValueError(
+                f"{self.name}: weight fields disagree on the grid shape: "
+                f"{sorted(shapes)} — every per-cell field must cover the "
+                f"same grid")
 
     @property
     def ndim(self) -> int:
         return len(self.taps[0][0])
+
+    @property
+    def is_variable(self) -> bool:
+        """Whether any tap carries a per-cell weight field."""
+        return any(isinstance(w, WeightField) for _, w in self.taps)
+
+    @property
+    def num_variable_taps(self) -> int:
+        return sum(1 for _, w in self.taps if isinstance(w, WeightField))
+
+    @property
+    def weights_shape(self) -> tuple[int, ...] | None:
+        """The grid shape the weight fields cover; None for all-scalar specs."""
+        for _, w in self.taps:
+            if isinstance(w, WeightField):
+                return w.shape
+        return None
 
     @property
     def radius(self) -> int:
@@ -97,6 +199,11 @@ class StencilSpec:
         Figure 2 of the paper: for 2D Laplace this is the 3×3 array with 0.25
         on the four faces and zeros elsewhere.
         """
+        if self.is_variable:
+            raise ValueError(
+                f"{self.name}: a variable-coefficient spec has no single "
+                f"conv kernel — its taps carry per-cell weight fields; use "
+                f"the dense/gather encodings or iterate the taps directly")
         lo = [min(off[d] for off, _ in self.taps) for d in range(self.ndim)]
         ker = np.zeros(self.footprint, dtype=dtype)
         for off, w in self.taps:
@@ -142,6 +249,52 @@ def box(ndim: int, weight: float | None = None) -> StencilSpec:
         off = tuple(i - 1 for i in idx)
         taps[off] = w
     return StencilSpec(taps=taps, name=f"box{ndim}d")
+
+
+def variable_coefficient(
+    base: StencilSpec, fields: Mapping[Offset, "np.ndarray"],
+    name: str | None = None,
+) -> StencilSpec:
+    """Replace chosen taps of ``base`` with per-cell weight fields.
+
+    ``fields`` maps offsets (which may be new or already present in ``base``)
+    to grid-shaped arrays; the remaining taps keep their scalar weights.
+    """
+    taps: dict = dict(base.taps)
+    for off, f in fields.items():
+        taps[tuple(int(c) for c in off)] = WeightField(np.asarray(f))
+    return StencilSpec(taps=taps, name=name or f"{base.name}_var")
+
+
+def heterogeneous_jacobi(kappa, name: str | None = None) -> StencilSpec:
+    """Variable-coefficient Jacobi step for heterogeneous diffusion.
+
+    ``kappa`` is a positive per-cell conductivity field of any rank; the
+    returned spec averages the face neighbours with harmonic-mean face
+    conductivities, normalized per cell so the weights sum to 1 — the Jacobi
+    relaxation of ``div(kappa grad u) = 0`` on a unit grid.  With constant
+    ``kappa`` this reduces exactly to :func:`laplace_jacobi`.
+    """
+    kappa = np.asarray(kappa, dtype=np.float64)
+    if kappa.ndim == 0:
+        raise ValueError("heterogeneous_jacobi needs a per-cell kappa field")
+    if not np.all(kappa > 0):
+        raise ValueError("kappa must be positive everywhere")
+    ndim = kappa.ndim
+    faces: dict[Offset, np.ndarray] = {}
+    for d in range(ndim):
+        n = kappa.shape[d]
+        for s in (-1, 1):
+            # neighbour kappa with edge replication (the edge faces are under
+            # the Dirichlet shell anyway, so their weights never matter)
+            idx = np.clip(np.arange(n) + s, 0, n - 1)
+            nbr = np.take(kappa, idx, axis=d)
+            off = [0] * ndim
+            off[d] = s
+            faces[tuple(off)] = 2.0 * kappa * nbr / (kappa + nbr)
+    total = sum(faces.values())
+    taps = {off: w / total for off, w in faces.items()}
+    return StencilSpec(taps=taps, name=name or f"hetero{ndim}d")
 
 
 def causal_conv1d_spec(weights: Sequence[float]) -> StencilSpec:

@@ -92,6 +92,11 @@ def jacobi2d_fused_step(
     """
     if spec.ndim != 2:
         raise ValueError("jacobi2d_fused_step needs a 2D spec")
+    if spec.is_variable:
+        raise ValueError(
+            "temporal fusion would need halo-replicated per-cell weight "
+            "fields; variable-coefficient specs run the direct stencil2d "
+            "kernel instead")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     B, H, W = x.shape

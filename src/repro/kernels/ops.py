@@ -40,19 +40,29 @@ def jacobi2d(
 
     fuse=1 streams one iteration per HBM round-trip (the paper-faithful
     pipeline); fuse=T applies temporal blocking (beyond-paper, §Perf).
-    ``iterations`` must be divisible by ``fuse``.
+    ``iterations`` must be divisible by ``fuse``.  Variable-coefficient
+    specs cannot temporally fuse (the fields would need halo replication);
+    they scan the direct ``stencil2d`` kernel one iteration per pass.
     """
     if iterations % fuse:
         raise ValueError(f"iterations={iterations} not divisible by fuse={fuse}")
+    if spec.is_variable and fuse != 1:
+        raise ValueError("variable-coefficient specs require fuse=1")
     bc = DirichletBC(bc_value)
     x = jax.vmap(bc.set_boundary)(x0)
 
-    def body(x, _):
-        y = jacobi2d_fused_step(
-            x, spec, fuse=fuse, block_h=block_h, bc_value=bc_value,
-            interpret=interpret,
-        )
-        return y, None
+    if spec.is_variable:
+        def body(x, _):
+            y = stencil2d(x, spec, block_h=block_h, bc_value=bc_value,
+                          interpret=interpret)
+            return y, None
+    else:
+        def body(x, _):
+            y = jacobi2d_fused_step(
+                x, spec, fuse=fuse, block_h=block_h, bc_value=bc_value,
+                interpret=interpret,
+            )
+            return y, None
 
     x, _ = jax.lax.scan(body, x, None, length=iterations // fuse)
     return x

@@ -23,20 +23,30 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.stencil import StencilSpec
+from repro.core.stencil import StencilSpec, WeightField
 from repro.kernels.tiling import halo_block_spec, round_up, shift2d
 
 
-def _stencil_block(xb: jnp.ndarray, spec: StencilSpec, r: int) -> jnp.ndarray:
+def _stencil_block(xb: jnp.ndarray, spec: StencilSpec, r: int,
+                   w_ref=None) -> jnp.ndarray:
+    """Shifted-add accumulation; varying taps read their per-cell weight
+    block (stacked tap-major, aligned with the output tile) from ``w_ref``."""
     acc = None
+    k = 0
     for off, wgt in spec.taps:
-        term = shift2d(xb, off[0], off[1], r).astype(jnp.float32) * np.float32(wgt)
+        term = shift2d(xb, off[0], off[1], r).astype(jnp.float32)
+        if isinstance(wgt, WeightField):
+            term = term * w_ref[k].astype(jnp.float32)
+            k += 1
+        else:
+            term = term * np.float32(wgt)
         acc = term if acc is None else acc + term
     return acc
 
 
-def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, block_h: int,
+def _kernel(x_ref, *refs, spec: StencilSpec, r: int, block_h: int,
             H: int, W: int, bc_value: float | None):
+    w_ref, o_ref = (refs[0], refs[1]) if len(refs) == 2 else (None, refs[0])
     i = pl.program_id(1)
     xb = x_ref[0]  # (block_h + 2r, Wp + 2r)
     bh2, bw2 = xb.shape
@@ -45,7 +55,7 @@ def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, block_h: int,
     cols = -r + jax.lax.broadcasted_iota(jnp.int32, (bh2, bw2), 1)
     # Out-of-array halo reads are undefined — zero them (zero-pad semantics).
     xb = jnp.where((rows >= 0) & (rows < H) & (cols >= 0) & (cols < W), xb, 0.0)
-    out = _stencil_block(xb, spec, r)
+    out = _stencil_block(xb, spec, r, w_ref)
     if bc_value is not None:
         # Fused paper mask trick: interior keeps the stencil result, the
         # boundary shell is pinned to the Dirichlet value.
@@ -88,18 +98,31 @@ def stencil2d(
     kern = functools.partial(
         _kernel, spec=spec, r=r, block_h=bh, H=H, W=W, bc_value=bc_value
     )
+    in_specs = [
+        halo_block_spec(
+            (1, bh + 2 * r, Wp + 2 * r),
+            lambda b, i: (b, i * bh, 0),
+            ((0, 0), (r, r), (r, r)),
+        )
+    ]
+    operands = [xp]
+    if spec.is_variable:
+        # Per-cell weight fields stream as a second operand, tiled over the
+        # same row blocks as the *output* (no halo — fields index the output
+        # cell) and shared across the batch grid axis.
+        fields = np.stack([w.array for _, w in spec.taps
+                           if isinstance(w, WeightField)])
+        wf = jnp.asarray(fields, jnp.float32)
+        wf = jnp.pad(wf, ((0, 0), (0, Hp - H), (0, Wp - W)))
+        in_specs.append(
+            pl.BlockSpec((wf.shape[0], bh, Wp), lambda b, i: (0, i, 0)))
+        operands.append(wf)
     out = pl.pallas_call(
         kern,
         grid=(B, Hp // bh),
-        in_specs=[
-            halo_block_spec(
-                (1, bh + 2 * r, Wp + 2 * r),
-                lambda b, i: (b, i * bh, 0),
-                ((0, 0), (r, r), (r, r)),
-            )
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bh, Wp), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hp, Wp), x.dtype),
         interpret=interpret,
-    )(xp)
+    )(*operands)
     return out[:, :H, :W]

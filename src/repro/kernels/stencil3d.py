@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.stencil import StencilSpec
+from repro.core.stencil import StencilSpec, WeightField
 from repro.kernels.tiling import halo_block_spec, round_up
 
 
@@ -31,8 +31,9 @@ def _shift3d(xb: jnp.ndarray, dz: int, dx: int, dy: int, r: int) -> jnp.ndarray:
     return jax.lax.slice(xz, (0, r + dx, r + dy), (Z, h - r + dx, w - r + dy))
 
 
-def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, block_x: int,
+def _kernel(x_ref, *refs, spec: StencilSpec, r: int, block_x: int,
             Z: int, X: int, Y: int, bc_value: float | None):
+    w_ref, o_ref = (refs[0], refs[1]) if len(refs) == 2 else (None, refs[0])
     i = pl.program_id(1)
     xb = x_ref[0].astype(jnp.float32)  # (Z, block_x + 2r, Yp + 2r)
     _, bx2, by2 = xb.shape
@@ -43,8 +44,14 @@ def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, block_x: int,
     xb = jnp.where(in_array, xb, 0.0)
 
     acc = None
+    k = 0
     for off, wgt in spec.taps:
-        term = _shift3d(xb, off[0], off[1], off[2], r) * np.float32(wgt)
+        term = _shift3d(xb, off[0], off[1], off[2], r)
+        if isinstance(wgt, WeightField):
+            term = term * w_ref[k].astype(jnp.float32)
+            k += 1
+        else:
+            term = term * np.float32(wgt)
         acc = term if acc is None else acc + term
 
     if bc_value is not None:
@@ -91,18 +98,29 @@ def stencil3d(
     kern = functools.partial(
         _kernel, spec=spec, r=r, block_x=bx, Z=Z, X=X, Y=Y, bc_value=bc_value
     )
+    in_specs = [
+        halo_block_spec(
+            (1, Z, bx + 2 * r, Yp + 2 * r),
+            lambda b, i: (b, 0, i * bx, 0),
+            ((0, 0), (0, 0), (r, r), (r, r)),
+        )
+    ]
+    operands = [xp]
+    if spec.is_variable:
+        # Per-cell weight fields: output-aligned X blocks, batch-shared.
+        fields = np.stack([w.array for _, w in spec.taps
+                           if isinstance(w, WeightField)])
+        wf = jnp.asarray(fields, jnp.float32)
+        wf = jnp.pad(wf, ((0, 0), (0, 0), (0, Xp - X), (0, Yp - Y)))
+        in_specs.append(
+            pl.BlockSpec((wf.shape[0], Z, bx, Yp), lambda b, i: (0, 0, i, 0)))
+        operands.append(wf)
     out = pl.pallas_call(
         kern,
         grid=(B, Xp // bx),
-        in_specs=[
-            halo_block_spec(
-                (1, Z, bx + 2 * r, Yp + 2 * r),
-                lambda b, i: (b, 0, i * bx, 0),
-                ((0, 0), (0, 0), (r, r), (r, r)),
-            )
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Z, bx, Yp), lambda b, i: (b, 0, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Z, Xp, Yp), x.dtype),
         interpret=interpret,
-    )(xp)
+    )(*operands)
     return out[:, :, :X, :Y]

@@ -22,10 +22,12 @@ from repro.core import (
     box,
     causal_conv1d_spec,
     choose_backend,
+    heterogeneous_jacobi,
     jacobi_reference,
     laplace_jacobi,
     star,
     stencil_apply,
+    variable_coefficient,
 )
 
 RNG = np.random.default_rng(20260802)
@@ -35,6 +37,12 @@ BC_VALUE = 1.5
 
 # Small odd-shaped grids: exercise block padding without slowing interpret mode.
 GRIDS = {1: (33,), 2: (12, 17), 3: (6, 10, 12)}
+
+
+def _kappa(ndim):
+    """A smooth positive conductivity field matching the test grid."""
+    return 1.0 + 9.0 * RNG.random(GRIDS[ndim]).astype(np.float32)
+
 
 SPECS = {
     "laplace/1d": laplace_jacobi(1),
@@ -47,6 +55,15 @@ SPECS = {
     "box/2d": box(2),
     "box/3d": box(3),
     "causal_conv1d/1d": causal_conv1d_spec([0.1, 0.2, 0.3, 0.4]),
+    # Variable-coefficient cells: every tap carries a per-cell weight field
+    # (heterogeneous diffusion), or a mix of scalar and per-cell taps.
+    "varcoef/1d": heterogeneous_jacobi(_kappa(1)),
+    "varcoef/2d": heterogeneous_jacobi(_kappa(2)),
+    "varcoef/3d": heterogeneous_jacobi(_kappa(3)),
+    "varcoef_mixed/2d": variable_coefficient(
+        laplace_jacobi(2),
+        {(0, 1): 0.25 + 0.1 * RNG.random(GRIDS[2]).astype(np.float32)},
+        name="varmix2d"),
 }
 
 MODES = (BoundaryMode.MASK, BoundaryMode.PAD, BoundaryMode.MATRIX)
@@ -180,3 +197,40 @@ class TestDispatcherContract:
                                           mode=m, bc=BC_VALUE)
                     if not sup:
                         assert len(sup.reason) > 10, (name, b, m)
+
+
+class TestVariableCoefficientSupport:
+    """The variable-coefficient cells that cannot run must say why."""
+
+    def test_pallas_fused_reports_reasoned_skip(self):
+        spec = SPECS["varcoef/2d"]
+        sup = backend_support("pallas_fused", spec, grid_shape=GRIDS[2],
+                              bc=BC_VALUE)
+        assert not sup and "fusion" in sup.reason
+
+    def test_halo_reports_reasoned_skip(self):
+        spec = SPECS["varcoef/2d"]
+        sup = backend_support("halo", spec, grid_shape=GRIDS[2], bc=BC_VALUE)
+        assert not sup and "shard" in sup.reason
+
+    def test_conv_3d_channels_reports_reasoned_skip(self):
+        spec = SPECS["varcoef/3d"]
+        sup = backend_support("conv", spec, grid_shape=GRIDS[3], bc=BC_VALUE)
+        assert not sup and "channels-trick" in sup.reason
+
+    def test_mismatched_field_shape_rejected_everywhere(self):
+        spec = SPECS["varcoef/2d"]
+        for b in BACKENDS:
+            sup = backend_support(b, spec, grid_shape=(8, 8), bc=BC_VALUE)
+            assert not sup and "weight fields" in sup.reason, b
+
+    def test_supported_variable_cells_cover_all_dims(self):
+        # Every varcoef family must have at least one real (non-oracle)
+        # backend per ndim, or the matrix would silently test nothing.
+        for name in ("varcoef/1d", "varcoef/2d", "varcoef/3d",
+                     "varcoef_mixed/2d"):
+            spec = SPECS[name]
+            legal = [b for b in BACKENDS if b != "reference" and any(
+                backend_support(b, spec, grid_shape=GRIDS[spec.ndim],
+                                mode=m, bc=BC_VALUE) for m in MODES)]
+            assert legal, name

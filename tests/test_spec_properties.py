@@ -7,7 +7,16 @@ hypothesis is installed (see requirements.txt).
 import numpy as np
 import pytest
 
-from repro.core import StencilSpec, box, causal_conv1d_spec, laplace_jacobi, star
+from repro.core import (
+    StencilSpec,
+    WeightField,
+    box,
+    causal_conv1d_spec,
+    heterogeneous_jacobi,
+    laplace_jacobi,
+    star,
+    variable_coefficient,
+)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -116,6 +125,87 @@ class TestPaperCounts:
     def test_inconsistent_ranks_rejected(self):
         with pytest.raises(ValueError, match="inconsistent"):
             StencilSpec(taps={(1,): 0.5, (0, 1): 0.5})
+
+
+class TestVariableCoefficientValidation:
+    """Hardened __post_init__ / to_kernel: malformed weight fields must be
+    rejected with clear errors, well-formed ones canonicalize cleanly."""
+
+    FIELD = np.full((5, 7), 0.25, np.float32)
+
+    def test_empty_taps_rejected(self):
+        with pytest.raises(ValueError, match="at least one tap"):
+            StencilSpec(taps={})
+
+    def test_wrong_field_rank_rejected(self):
+        with pytest.raises(ValueError, match="rank"):
+            StencilSpec(taps={(0, 1): np.zeros((5,), np.float32) + 0.25,
+                              (0, -1): 0.25})
+
+    def test_mismatched_field_shapes_rejected(self):
+        with pytest.raises(ValueError, match="disagree"):
+            StencilSpec(taps={(0, 1): np.full((5, 7), 0.25),
+                              (0, -1): np.full((6, 7), 0.25)})
+
+    def test_scalar_weight_field_rejected(self):
+        with pytest.raises(ValueError, match="not a scalar"):
+            WeightField(np.float32(0.25))
+
+    def test_non_numeric_weight_rejected(self):
+        with pytest.raises(ValueError, match="malformed weight"):
+            StencilSpec(taps={(0, 1): "fast"})
+
+    def test_to_kernel_rejects_variable_spec(self):
+        spec = StencilSpec(taps={(0, 1): self.FIELD, (0, -1): 0.25})
+        with pytest.raises(ValueError, match="no single .*kernel"):
+            spec.to_kernel()
+
+    def test_array_weights_canonicalize_to_weight_fields(self):
+        spec = StencilSpec(taps={(0, 1): self.FIELD, (0, -1): 0.25})
+        kinds = {off: type(w) for off, w in spec.taps}
+        assert kinds[(0, 1)] is WeightField
+        assert kinds[(0, -1)] is float
+        assert spec.is_variable
+        assert spec.num_variable_taps == 1
+        assert spec.weights_shape == (5, 7)
+
+    def test_weight_field_is_immutable_and_hashable(self):
+        wf = WeightField(self.FIELD)
+        with pytest.raises(AttributeError):
+            wf.array = np.zeros((2, 2))
+        with pytest.raises(ValueError):
+            wf.array[0, 0] = 1.0  # read-only buffer
+        same = WeightField(self.FIELD.copy())
+        assert wf == same and hash(wf) == hash(same)
+        spec_a = StencilSpec(taps={(0, 1): wf, (0, -1): 0.25})
+        spec_b = StencilSpec(taps={(0, 1): same, (0, -1): 0.25})
+        assert spec_a == spec_b and len({spec_a: 1, spec_b: 2}) == 1
+
+    def test_variable_coefficient_factory(self):
+        spec = variable_coefficient(laplace_jacobi(2), {(0, 1): self.FIELD})
+        assert spec.is_variable and spec.num_variable_taps == 1
+        assert len(spec.taps) == 4
+
+    def test_heterogeneous_jacobi_reduces_to_laplace(self):
+        # Constant kappa: every tap field equals the laplace_jacobi weight.
+        spec = heterogeneous_jacobi(np.full((6, 8), 3.0))
+        assert spec.num_variable_taps == 4
+        for _, w in spec.taps:
+            np.testing.assert_allclose(w.array, 0.25, atol=1e-6)
+
+    def test_heterogeneous_jacobi_rejects_bad_kappa(self):
+        with pytest.raises(ValueError, match="positive"):
+            heterogeneous_jacobi(np.zeros((4, 4)))
+        with pytest.raises(ValueError, match="per-cell"):
+            heterogeneous_jacobi(2.0)
+
+    def test_field_shape_vs_grid_checked_at_apply(self):
+        import jax.numpy as jnp
+        from repro.core import stencil_apply
+        spec = StencilSpec(taps={(0, 1): self.FIELD, (0, -1): 0.25})
+        with pytest.raises(ValueError, match="weight fields"):
+            stencil_apply(spec, jnp.zeros((8, 8), jnp.float32),
+                          backend="reference", bc=0.0)
 
 
 class TestHypothesisSweep:
