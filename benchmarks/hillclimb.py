@@ -6,14 +6,24 @@ roofline terms (EXPERIMENTS §Perf methodology).
 
 Runs in-process; invoke once per iteration (fresh XLA state per run).
 """
-import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 import argparse
 import dataclasses
 import json
+import os
 import time
+
+
+def _force_host_devices(n: int = 512) -> None:
+    """Expose ``n`` fake host devices for the mesh dry-run by *appending* to
+    XLA_FLAGS.  Only ``main()`` calls this — importing the module must never
+    mutate process env (clobbering a caller's own XLA_FLAGS was a bug), and
+    an already-present device-count flag is left alone.
+    """
+    if "--xla_force_host_platform_device_count" in os.environ.get(
+            "XLA_FLAGS", ""):
+        return
+    flag = f"--xla_force_host_platform_device_count={n}"
+    os.environ["XLA_FLAGS"] = f"{os.environ.get('XLA_FLAGS', '')} {flag}".strip()
 
 
 def parse_override(s: str):
@@ -26,13 +36,20 @@ def parse_override(s: str):
     return k, v
 
 
-def run(arch: str, shape: str, overrides: dict, multi_pod=False) -> dict:
+def run(arch: str, shape: str, overrides: dict, multi_pod=False,
+        device_kind: str = "tpu") -> dict:
     import jax
+    from repro.core.plan import DEVICE_PROFILES
     from repro.launch import hlo_cost
     from repro.launch.mesh import make_production_mesh
     from repro.launch.specs import (
         input_shardings, input_specs, make_cell, make_sharder, make_step_fn,
     )
+
+    # Price against the same per-device table the stencil cost model uses
+    # (core/plan.py DEVICE_PROFILES) — the three roofline denominators used
+    # to be free-floating constants here that could drift from the model.
+    prof = DEVICE_PROFILES[device_kind]
 
     cell = make_cell(arch, shape)
     if overrides:
@@ -52,9 +69,10 @@ def run(arch: str, shape: str, overrides: dict, multi_pod=False) -> dict:
     mem = compiled.memory_analysis()
     out = {
         "arch": arch, "shape": shape, "overrides": overrides,
-        "compute_s": r["flops"] / 197e12,
-        "memory_s": r["hbm_bytes"] / 819e9,
-        "collective_s": r["collective_bytes_total"] / 50e9,
+        "device_kind": device_kind,
+        "compute_s": r["flops"] / prof.matmul_flops,
+        "memory_s": r["hbm_bytes"] / prof.mem_bw,
+        "collective_s": r["collective_bytes_total"] / prof.collective_bw,
         "flops_per_dev": r["flops"],
         "hbm_gb_per_dev": r["hbm_bytes"] / 1e9,
         "coll_gb_per_dev": r["collective_bytes_total"] / 1e9,
@@ -68,7 +86,8 @@ def run(arch: str, shape: str, overrides: dict, multi_pod=False) -> dict:
     model_flops_dev = mult * n_active * tokens / mesh.size
     bound = max(out["compute_s"], out["memory_s"], out["collective_s"])
     out["useful_ratio"] = model_flops_dev / r["flops"] if r["flops"] else 0
-    out["roofline_frac"] = (model_flops_dev / 197e12) / bound if bound else 0
+    out["roofline_frac"] = (model_flops_dev / prof.matmul_flops) / bound \
+        if bound else 0
     return out
 
 
@@ -78,9 +97,13 @@ def main():
     ap.add_argument("--shape", required=True)
     ap.add_argument("--set", nargs="*", default=[])
     ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--device-kind", default="tpu",
+                    help="DEVICE_PROFILES row to price the roofline against")
     args = ap.parse_args()
+    _force_host_devices()
     overrides = dict(parse_override(s) for s in args.set)
-    out = run(args.arch, args.shape, overrides, args.multipod)
+    out = run(args.arch, args.shape, overrides, args.multipod,
+              device_kind=args.device_kind)
     print(json.dumps(out, indent=1))
 
 

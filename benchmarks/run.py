@@ -2,12 +2,17 @@
 Prints ``name,us_per_call,derived`` CSV rows and (with ``--json``) writes a
 machine-readable artifact so the perf trajectory is trackable across commits.
 
-JSON schema (stable, version 3):
+JSON schema (stable, version 4):
 
-  {"schema": 3,
+  {"schema": 4,
    "us_per_call": {row name: microseconds per timed call},
+   "interpreted_rows": [row names whose timing came from interpret-mode
+                        Pallas — structurally tagged so consumers exclude
+                        them from fastest-backend comparisons instead of
+                        pattern-matching "(interp)" name suffixes],
    "solver":      {row name: {"mode": "fixed"|"converged",
                               "iters": int, "s_per_iter": float,
+                              # interpret-mode rows carry "interpreted": true
                               # converged rows additionally carry:
                               "backend": str, "residual": float,
                               "converged": bool}},
@@ -17,11 +22,18 @@ JSON schema (stable, version 3):
                               "residual": float, "converged": bool,
                               # rows with a Jacobi baseline additionally:
                               "jacobi_iters": int,
-                              "work_ratio_vs_jacobi": float}}}
+                              "work_ratio_vs_jacobi": float}},
+   "autotune":    {row name: {"backend": str,
+                              "source": "roofline"|"tuned"|"explicit",
+                              "fuse": int, "rim": str|null,
+                              "s_per_iter": float, "interpreted": bool,
+                              "candidates_measured": int}}}
 
 Sections may return either a list of CSV rows or (rows, metrics dict);
 metric keys starting with ``multigrid/`` land in the ``multigrid`` section,
-everything else in ``solver``.
+``autotune/`` in ``autotune``, everything else in ``solver``.  Any metric
+row carrying ``"interpreted": true`` also lands its name in the top-level
+``interpreted_rows`` list.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only table1_2d ...]
                                           [--json BENCH_stencil.json]
@@ -41,6 +53,7 @@ _ALIASES = {
     "fig6_3d": "fig6",
     "stencil_fuse_sweep": "stencil-fuse",
     "multigrid_bench": "multigrid",
+    "autotune_bench": "autotune",
 }
 
 
@@ -50,13 +63,15 @@ def main() -> int:
                     help="smaller step counts (CI)")
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write the schema-3 JSON artifact "
-                         "({schema, us_per_call, solver, multigrid})")
+                    help="also write the schema-4 JSON artifact "
+                         "({schema, us_per_call, interpreted_rows, solver, "
+                         "multigrid, autotune})")
     args = ap.parse_args()
     only = ({_ALIASES.get(o, o) for o in args.only} if args.only else None)
 
-    from benchmarks import (fig5_shapes, fig6_3d, multigrid_bench, roofline,
-                            stencil_fuse_sweep, table1_2d)
+    from benchmarks import (autotune_bench, fig5_shapes, fig6_3d,
+                            multigrid_bench, roofline, stencil_fuse_sweep,
+                            table1_2d)
 
     sections = {
         "table1": lambda: table1_2d.run(steps=4 if args.fast else 8,
@@ -67,6 +82,9 @@ def main() -> int:
         "roofline": roofline.run,
         "multigrid": lambda: multigrid_bench.run(
             rtol=1e-5 if args.fast else 1e-6),
+        "autotune": lambda: autotune_bench.run(
+            iters=20 if args.fast else 100,
+            tune_iters=20, repeats=1 if args.fast else 3),
     }
     failed = 0
     if only:
@@ -78,6 +96,8 @@ def main() -> int:
     results: dict[str, float] = {}
     solver_metrics: dict[str, dict] = {}
     mg_metrics: dict[str, dict] = {}
+    tune_metrics: dict[str, dict] = {}
+    interpreted_rows: list[str] = []
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if only and name not in only:
@@ -87,8 +107,14 @@ def main() -> int:
             if isinstance(out, tuple):
                 rows, metrics = out
                 for k, v in metrics.items():
-                    (mg_metrics if k.startswith("multigrid/")
-                     else solver_metrics)[k] = v
+                    if k.startswith("multigrid/"):
+                        mg_metrics[k] = v
+                    elif k.startswith("autotune/"):
+                        tune_metrics[k] = v
+                    else:
+                        solver_metrics[k] = v
+                    if isinstance(v, dict) and v.get("interpreted"):
+                        interpreted_rows.append(k)
             else:
                 rows = out
             for row in rows:
@@ -109,12 +135,15 @@ def main() -> int:
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
     if args.json:
-        payload = {"schema": 3, "us_per_call": results,
-                   "solver": solver_metrics, "multigrid": mg_metrics}
+        payload = {"schema": 4, "us_per_call": results,
+                   "interpreted_rows": sorted(interpreted_rows),
+                   "solver": solver_metrics, "multigrid": mg_metrics,
+                   "autotune": tune_metrics}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {len(results)} timing rows + {len(solver_metrics)} "
-              f"solver rows + {len(mg_metrics)} multigrid rows to "
+              f"solver rows + {len(mg_metrics)} multigrid rows + "
+              f"{len(tune_metrics)} autotune rows to "
               f"{args.json}", file=sys.stderr)
     return 1 if failed else 0
 

@@ -1,28 +1,44 @@
 #!/usr/bin/env bash
 # CI entry point.
 #
-#   scripts/ci.sh          fast tier: tests minus the `slow` marker (full
-#                          conformance matrix, subprocess multi-device runs)
-#                          + the fast stencil benchmark
-#   scripts/ci.sh --all    full tier: every test (matrix + solver +
-#                          distributed) + the table1/fig6 benchmark sections
+#   scripts/ci.sh              fast tier: tests minus the `slow` marker (full
+#                              conformance matrix, subprocess multi-device
+#                              runs) + the fast stencil benchmark
+#   scripts/ci.sh --all        full tier: every test (matrix + solver +
+#                              distributed) + the table1/fig6 benchmark
+#                              sections
+#   scripts/ci.sh --tune-check validate the committed TUNED_stencil.json only
+#                              (schema + every entry maps to a legal
+#                              backend_support cell) and exit
 #
-# Both tiers refresh BENCH_stencil.json (schema 3: us_per_call + solver +
-# multigrid metrics) so the perf trajectory and the cost-model regression tests in
-# tests/solver/test_cost_model.py stay anchored to this host.
+# Both test tiers refresh BENCH_stencil.json (schema 4: us_per_call +
+# interpreted_rows + solver + multigrid + autotune metrics) so the perf
+# trajectory and the cost-model regression tests in
+# tests/solver/test_cost_model.py stay anchored to this host, and both run
+# the tune-check so a stale/illegal tuned table fails CI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-if [[ "${1:-}" == "--all" ]]; then
+tune_check() {
+  echo "== tuned-table check (TUNED_stencil.json) =="
+  python -m repro.core.autotune --check TUNED_stencil.json
+}
+
+if [[ "${1:-}" == "--tune-check" ]]; then
+  tune_check
+  exit 0
+elif [[ "${1:-}" == "--all" ]]; then
+  tune_check
   echo "== full test suite (matrix + solver + distributed tiers) =="
   python -m pytest -x -q
-  echo "== stencil benchmark (table1 + fig6 + multigrid) =="
-  python -m benchmarks.run --only table1_2d fig6_3d multigrid --json BENCH_stencil.json
+  echo "== stencil benchmark (table1 + fig6 + multigrid + autotune) =="
+  python -m benchmarks.run --only table1_2d fig6_3d multigrid autotune --json BENCH_stencil.json
 else
+  tune_check
   echo "== fast test tier (-m 'not slow') =="
   python -m pytest -x -q -m "not slow"
   echo "== stencil benchmark (fast) =="
-  python -m benchmarks.run --fast --only table1_2d multigrid --json BENCH_stencil.json
+  python -m benchmarks.run --fast --only table1_2d multigrid autotune --json BENCH_stencil.json
 fi

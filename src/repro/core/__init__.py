@@ -24,6 +24,15 @@ red-black Gauss-Seidel — ``multigrid_solve`` reaches the same fixed point as
 Variable-coefficient operators (per-cell ``WeightField`` taps, e.g.
 ``heterogeneous_jacobi``) flow through the same spec/backend machinery.
 """
+from repro.core.autotune import (
+    TunedEntry,
+    TunedTable,
+    autotune_cell,
+    default_tuned_table,
+    set_default_tuned_table,
+    shape_bucket,
+    spec_family,
+)
 from repro.core.boundary import BoundaryMode, DirichletBC
 from repro.core.conv1d import causal_conv1d, causal_conv1d_update
 from repro.core.conv_encoding import (
@@ -86,7 +95,14 @@ __all__ = [
     "Solver",
     "StencilPlan",
     "StencilSpec",
+    "TunedEntry",
+    "TunedTable",
     "WeightField",
+    "autotune_cell",
+    "default_tuned_table",
+    "set_default_tuned_table",
+    "shape_bucket",
+    "spec_family",
     "solve",
     "apply_stencil",
     "backend_support",

@@ -205,14 +205,18 @@ class DeviceProfile:
     matmul_flops: float   # MXU / GEMM FLOP/s
     mem_bw: float         # HBM / DRAM bytes/s
     pallas_native: bool   # False => Pallas runs in interpret mode
+    collective_bw: float = 5e10  # inter-device (ICI/NVLink/net) bytes/s
 
 
 DEVICE_PROFILES = {
     # One CPU core; Pallas falls back to the (slow) interpreter.
-    "cpu": DeviceProfile("cpu", 5e10, 2e11, 5e10, pallas_native=False),
-    "gpu": DeviceProfile("gpu", 2e13, 1.5e14, 2e12, pallas_native=True),
+    "cpu": DeviceProfile("cpu", 5e10, 2e11, 5e10, pallas_native=False,
+                         collective_bw=1e9),
+    "gpu": DeviceProfile("gpu", 2e13, 1.5e14, 2e12, pallas_native=True,
+                         collective_bw=1e11),
     # v5e-class: the ~240 FLOP/byte ridge the kernel docstrings cite.
-    "tpu": DeviceProfile("tpu", 4e12, 2e14, 8e11, pallas_native=True),
+    "tpu": DeviceProfile("tpu", 4e12, 2e14, 8e11, pallas_native=True,
+                         collective_bw=5e10),
 }
 
 # Interpret-mode Pallas re-traces every lane op in Python — orders of
@@ -299,8 +303,21 @@ def choose_backend(
     device_kind: str | None = None,
     mesh=None,
     fuse: int | None = None,
+    dtype=jnp.float32,
+    interpret: bool | None = None,
+    tuned="default",
 ) -> tuple[str, dict[str, float]]:
     """Pick the cheapest supported backend; returns (name, cost table).
+
+    Measured entries take priority over the roofline: when the tuned table
+    (``tuned="default"`` → the committed ``TUNED_stencil.json``; pass a
+    ``TunedTable`` to override or ``None`` to disable) holds measurements
+    for this (device, family, shape-bucket, dtype) cell, the returned cost
+    table contains those *measured* per-backend seconds and the pick is
+    their argmin — interpret-mode measurements are structurally excluded, so
+    an interpreted Pallas run can never be priced as a compiled one.  When
+    no entry applies (unknown cell, stale table, unsupported backend) the
+    analytic roofline below is the explicit fallback.
 
     Two backends are special-cased: ``halo`` is a *distribution strategy*,
     not a local encoding, so it is only considered when a mesh is explicitly
@@ -311,12 +328,36 @@ def choose_backend(
     ``fuse`` prices the Pallas paths at an explicit temporal depth (e.g. the
     deepest depth the caller's chunking can actually run — the solver passes
     this); None prices the depth make_plan itself would resolve for
-    ``iters``.
+    ``iters``.  ``interpret=True`` declares that any Pallas plan built from
+    this choice will be forced into interpret mode, so the Pallas paths are
+    priced with the interpreter penalty regardless of the device profile.
     """
     if device_kind is None:
         device_kind = jax.default_backend()
     device = DEVICE_PROFILES.get(device_kind, DEVICE_PROFILES["cpu"])
 
+    # -- measured table first ---------------------------------------------
+    from repro.core import autotune
+    table = autotune.resolve_table(tuned)
+    if table is not None and len(table):
+        cell = table.lookup_cell(device_kind, autotune.spec_family(spec),
+                                 tuple(grid_shape), autotune.dtype_key(dtype))
+        measured: dict[str, float] = {}
+        for e in cell:
+            if e.interpreted or e.backend in measured and \
+                    e.seconds(iters) >= measured[e.backend]:
+                continue
+            if e.backend == "halo" and mesh is None:
+                continue
+            if not backend_support(e.backend, spec, grid_shape=grid_shape,
+                                   mode=mode, bc=bc, mesh=mesh):
+                continue
+            measured[e.backend] = e.seconds(iters)
+        if measured:
+            best = min(measured, key=measured.__getitem__)
+            return best, measured
+
+    # -- explicit roofline fallback ---------------------------------------
     costs: dict[str, float] = {}
     for b in BACKENDS:
         if b == "halo" and mesh is None:
@@ -328,6 +369,9 @@ def choose_backend(
             continue
         costs[b] = estimate_seconds(b, spec, grid_shape, iters, device,
                                     fuse=fuse)
+        if interpret is True and b in ("pallas", "pallas_fused") \
+                and device.pallas_native:
+            costs[b] *= _INTERPRET_PENALTY
     if not costs:
         # Oracle fallback: always legal, never preferred.
         costs["reference"] = estimate_seconds("reference", spec, grid_shape,
@@ -357,6 +401,14 @@ class StencilPlan:
     fuse: int
     costs: dict[str, float]
     _fn: Callable[[jnp.ndarray], jnp.ndarray]
+    # Whether the Pallas kernels behind this plan actually run interpreted
+    # (False for every non-Pallas backend) — benchmarks and the autotuner
+    # use this to tag rows structurally instead of trusting name suffixes.
+    interpreted: bool = False
+    # Where the backend choice came from: "explicit" (caller named it),
+    # "tuned" (measured-table hit), or "roofline" (analytic fallback).
+    source: str = "explicit"
+    rim: str | None = None
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         squeeze = x.ndim == self.spec.ndim
@@ -419,12 +471,19 @@ def make_plan(
     mesh=None,
     interpret: bool | None = None,
     device_kind: str | None = None,
+    block_h: int | None = None,
+    rim: str | None = None,
+    tuned="default",
 ) -> StencilPlan:
     """Lower ``spec`` on ``grid_shape`` through one backend into a callable.
 
-    backend="auto" routes through :func:`choose_backend`.  ``bc=None`` means
-    raw zero-padded stencil application (no Dirichlet fixup) — only the
-    reference and Pallas backends can express it.
+    backend="auto" routes through :func:`choose_backend` — a measured
+    tuned-table entry (``tuned``) supplies the whole schedule (backend, fuse
+    depth, block shape, rim strategy) when one applies; the roofline is the
+    fallback.  ``bc=None`` means raw zero-padded stencil application (no
+    Dirichlet fixup) — only the reference and Pallas backends can express
+    it.  ``block_h``/``rim`` tune the 2D Pallas block geometry (other
+    backends ignore them).
     """
     if spec.ndim != len(grid_shape):
         raise ValueError(f"spec is {spec.ndim}D but grid is {len(grid_shape)}D")
@@ -437,10 +496,29 @@ def make_plan(
     bc = _as_bc(bc)
 
     costs: dict[str, float] = {}
+    source = "explicit"
     if backend == "auto":
         backend, costs = choose_backend(
             spec, grid_shape, mode=mode, bc=bc, iters=iters,
-            device_kind=device_kind, mesh=mesh)
+            device_kind=device_kind, mesh=mesh, dtype=dtype,
+            interpret=interpret, tuned=tuned)
+        source = "roofline"
+        # A measured entry carries the whole schedule, not just the backend:
+        # inherit its fuse depth / block shape / rim strategy where the
+        # caller left them open.
+        from repro.core import autotune
+        table = autotune.resolve_table(tuned)
+        entry = table.lookup(
+            device_kind or jax.default_backend(), autotune.spec_family(spec),
+            tuple(grid_shape), autotune.dtype_key(dtype)) if table else None
+        if entry is not None and entry.backend == backend:
+            source = "tuned"
+            if fuse is None and entry.fuse > 1 and iters % entry.fuse == 0:
+                fuse = entry.fuse
+            if block_h is None:
+                block_h = entry.block_h
+            if rim is None:
+                rim = entry.rim
     sup = backend_support(backend, spec, grid_shape=grid_shape, mode=mode,
                           bc=bc, mesh=mesh)
     if not sup:
@@ -454,23 +532,34 @@ def make_plan(
         and not spec.is_variable
     if not fusing:
         fuse = 1
+        rim = None
     elif fuse is None:
-        fuse = _resolve_fuse(iters) if backend == "pallas_fused" else 1
+        if rim == "resident":
+            fuse = iters  # the whole chunk stays resident in VMEM
+        else:
+            fuse = _resolve_fuse(iters) if backend == "pallas_fused" else 1
     elif iters % fuse:
         raise ValueError(f"iters={iters} not divisible by fuse={fuse}")
+    if fusing and rim is None and fuse > 1:
+        rim = "trapezoid"
+
+    from repro.kernels.tiling import default_interpret
+    interpreted = backend in ("pallas", "pallas_fused") \
+        and default_interpret(interpret)
 
     fn = _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype,
-                   mesh, interpret)
+                   mesh, interpret, block_h, rim)
     # One jit over the whole closure: the per-call preamble (conv-kernel
     # build, set_boundary, mask/bc grids, halo sharding constraint) traces
     # into constants, so repeated plan calls pay only compiled execution.
     fn = jax.jit(fn)
     return StencilPlan(spec=spec, backend=backend, grid_shape=grid_shape,
-                       mode=mode, iters=iters, fuse=fuse, costs=costs, _fn=fn)
+                       mode=mode, iters=iters, fuse=fuse, costs=costs, _fn=fn,
+                       interpreted=interpreted, source=source, rim=rim)
 
 
 def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
-              interpret):
+              interpret, block_h=None, rim=None):
     """One closure per backend; all share (batch, *grid) -> same semantics."""
     # Imports deferred so importing repro.core never drags in the Pallas /
     # shard_map machinery for users who only want the specs.
@@ -509,16 +598,20 @@ def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
 
     if backend in ("pallas", "pallas_fused"):
         bc_value = _scalar_bc_value(bc)
+        rim = rim or "trapezoid"
+        kw2d = {"block_h": block_h} if block_h else {}
         if spec.ndim == 3:
             from repro.kernels import jacobi3d, stencil3d
+            kw3d = {"block_x": block_h} if block_h else {}
             if bc_value is not None:
                 return lambda x: jacobi3d(x.astype(dtype), spec,
                                           bc_value=bc_value, iterations=iters,
-                                          interpret=interpret)
+                                          interpret=interpret, **kw3d)
 
             def run_raw3d(x):
                 def body(t, _):
-                    return stencil3d(t, spec, interpret=interpret), None
+                    return stencil3d(t, spec, interpret=interpret,
+                                     **kw3d), None
                 y, _ = jax.lax.scan(body, x.astype(dtype), None, length=iters)
                 return y
             return run_raw3d
@@ -527,13 +620,14 @@ def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
             from repro.kernels import jacobi2d
             return lambda x: jacobi2d(x.astype(dtype), spec, bc_value=bc_value,
                                       iterations=iters, fuse=fuse,
-                                      interpret=interpret)
+                                      interpret=interpret, rim=rim, **kw2d)
         if spec.is_variable:
             from repro.kernels import stencil2d
 
             def run_raw2d_var(x):
                 def body(t, _):
-                    return stencil2d(t, spec, interpret=interpret), None
+                    return stencil2d(t, spec, interpret=interpret,
+                                     **kw2d), None
                 y, _ = jax.lax.scan(body, x.astype(dtype), None, length=iters)
                 return y
             return run_raw2d_var
@@ -542,7 +636,8 @@ def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
         def run_raw2d(x):
             def body(t, _):
                 return jacobi2d_fused_step(t, spec, fuse=fuse,
-                                           interpret=interpret), None
+                                           interpret=interpret, rim=rim,
+                                           **kw2d), None
             y, _ = jax.lax.scan(body, x.astype(dtype), None,
                                 length=iters // fuse)
             return y
@@ -578,6 +673,9 @@ def stencil_apply(
     mesh=None,
     interpret: bool | None = None,
     device_kind: str | None = None,
+    block_h: int | None = None,
+    rim: str | None = None,
+    tuned="default",
 ) -> jnp.ndarray:
     """Apply ``iters`` stencil steps to ``x`` through any backend.
 
@@ -594,5 +692,6 @@ def stencil_apply(
     grid_shape = tuple(x.shape[-spec.ndim:])
     plan = make_plan(spec, grid_shape, backend=backend, bc=bc, mode=mode,
                      iters=iters, fuse=fuse, dtype=x.dtype, mesh=mesh,
-                     interpret=interpret, device_kind=device_kind)
+                     interpret=interpret, device_kind=device_kind,
+                     block_h=block_h, rim=rim, tuned=tuned)
     return plan(x)

@@ -96,18 +96,33 @@ class SolveResult:
 
 
 def select_fuse(backend: str, spec: StencilSpec, grid_shape: tuple[int, ...],
-                check_every: int, device_kind: str | None = None) -> int | None:
-    """Temporal fuse depth the roofline model prices cheapest for one chunk.
+                check_every: int, device_kind: str | None = None,
+                tuned="default", dtype=jnp.float32) -> int | None:
+    """Temporal fuse depth for one chunk: measured if tuned, else roofline.
 
     Only the 2D Pallas paths fuse; every other backend gets ``None`` (the
-    plan records fuse=1).  Candidates must divide ``check_every`` so chunk
-    boundaries land on whole fused passes.
+    plan records fuse=1).  A tuned-table entry for this cell whose backend
+    matches supplies the measured depth first (clamped to the largest
+    divisor of ``check_every`` so chunk boundaries land on whole fused
+    passes); the roofline model prices the candidate depths otherwise.
     """
     if backend not in ("pallas", "pallas_fused") or spec.ndim != 2 \
             or spec.is_variable:
         return None
     if device_kind is None:
         device_kind = jax.default_backend()
+
+    from repro.core import autotune
+    table = autotune.resolve_table(tuned)
+    if table is not None and len(table):
+        entry = table.lookup(device_kind, autotune.spec_family(spec),
+                             tuple(grid_shape), autotune.dtype_key(dtype))
+        if entry is not None and entry.backend == backend and entry.fuse >= 1:
+            f = min(entry.fuse, check_every)
+            while check_every % f:
+                f -= 1
+            return f
+
     device = DEVICE_PROFILES.get(device_kind, DEVICE_PROFILES["cpu"])
     candidates = [f for f in _FUSE_CANDIDATES if check_every % f == 0]
     return min(candidates,
@@ -154,6 +169,7 @@ class Solver:
         mesh=None,
         interpret: bool | None = None,
         device_kind: str | None = None,
+        tuned="default",
     ):
         if norm not in ("l2", "linf"):
             raise ValueError(f"norm must be 'l2' or 'linf', got {norm!r}")
@@ -187,6 +203,7 @@ class Solver:
         self.n_chunks = max(1, self.max_iters // self.check_every)
 
         self.costs: dict[str, float] = {}
+        was_auto = backend == "auto"
         if backend == "auto":
             # Price the whole solve (max_iters), not one chunk — fusion and
             # fixed per-iteration overheads amortize over the full loop —
@@ -196,21 +213,44 @@ class Solver:
             if pricing_fuse is None:
                 pricing_fuse = select_fuse("pallas_fused", spec,
                                            self.grid_shape, self.check_every,
-                                           device_kind)
+                                           device_kind, tuned=tuned)
             backend, self.costs = choose_backend(
                 spec, self.grid_shape, mode=mode, bc=bc,
                 iters=self.max_iters, device_kind=device_kind, mesh=mesh,
-                fuse=pricing_fuse)
+                fuse=pricing_fuse, dtype=dtype, interpret=interpret,
+                tuned=tuned)
 
         if fuse is None:
             fuse = select_fuse(backend, spec, self.grid_shape,
-                               self.check_every, device_kind)
+                               self.check_every, device_kind, tuned=tuned,
+                               dtype=dtype)
+        # A measured entry for this cell carries the rest of the schedule
+        # (block shape, rim strategy) beside the fuse depth select_fuse
+        # already took from it.
+        block_h = rim = None
+        entry = None
+        from repro.core import autotune
+        table = autotune.resolve_table(tuned)
+        if table is not None and len(table):
+            entry = table.lookup(
+                device_kind or jax.default_backend(),
+                autotune.spec_family(spec), self.grid_shape,
+                autotune.dtype_key(dtype))
+            if entry is not None and entry.backend == backend:
+                block_h, rim = entry.block_h, entry.rim
         # (an explicit fuse that does not divide check_every is rejected by
         # make_plan's iters/fuse divisibility check)
         self.plan: StencilPlan = make_plan(
             spec, self.grid_shape, backend=backend, bc=bc, mode=mode,
             iters=self.check_every, fuse=fuse, dtype=dtype, mesh=mesh,
-            interpret=interpret, device_kind=device_kind)
+            interpret=interpret, device_kind=device_kind, tuned=tuned,
+            block_h=block_h, rim=rim)
+        if was_auto:
+            # The solver resolved "auto" itself (to price the whole solve),
+            # so the plan saw an explicit backend name — restore where the
+            # choice actually came from.
+            self.plan.source = ("tuned" if entry is not None
+                                and entry.backend == backend else "roofline")
         self.backend = self.plan.backend
         self.fuse = self.plan.fuse
         if not self.fixed:
@@ -333,6 +373,7 @@ def solve(
     mesh=None,
     interpret: bool | None = None,
     device_kind: str | None = None,
+    tuned="default",
 ) -> SolveResult:
     """One-shot iterative solve: run ``spec``'s time loop from ``x0``.
 
@@ -352,5 +393,5 @@ def solve(
         spec, grid_shape, backend=backend, bc=bc, mode=mode, rtol=rtol,
         atol=atol, norm=norm, check_every=check_every, max_iters=max_iters,
         fuse=fuse, dtype=dtype, mesh=mesh, interpret=interpret,
-        device_kind=device_kind)
+        device_kind=device_kind, tuned=tuned)
     return solver.solve(x0)

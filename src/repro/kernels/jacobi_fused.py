@@ -16,6 +16,19 @@ valid after T iterations.  In-array interior points never read out-of-array
 points (the Dirichlet shell separates them), so the rim garbage never
 propagates inward; the shell itself is re-pinned to the BC value every
 iteration by the fused mask trick.
+
+Two rim strategies (``rim=``, searched by the autotuner):
+
+  "trapezoid"  the scheme above — overlapping row blocks, halo T·r deep,
+               O(T·r) redundant rim recompute per block;
+  "resident"   the whole grid lives in ONE VMEM block (the closest TPU
+               analogue of the WSE's grid-stays-in-SRAM execution): the
+               out-of-grid rim is re-zeroed between in-kernel iterations
+               instead of being carried in a deeper halo, so there is no
+               redundant compute and *no geometric limit on T* — depths the
+               trapezoid rejects (T > block_h/r, or any T with a halo wider
+               than the block) are legal.  Only valid when the padded grid
+               fits VMEM (``tiling.resident_fits``).
 """
 from __future__ import annotations
 
@@ -27,7 +40,13 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.stencil import StencilSpec
-from repro.kernels.tiling import fused_block_geometry, halo_block_spec, shift2d
+from repro.kernels.tiling import (
+    default_interpret,
+    fused_block_geometry,
+    halo_block_spec,
+    resident_fits,
+    shift2d,
+)
 
 
 def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, T: int,
@@ -72,9 +91,48 @@ def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, T: int,
     o_ref[0] = xb.astype(o_ref.dtype)
 
 
+def _shift2d_zfill(xb: jnp.ndarray, dr: int, dc: int, r: int) -> jnp.ndarray:
+    """result[i,j] = xb[i+dr, j+dc] with zero fill — same contract as
+    ``shift2d`` but for a block with no halo (the resident strategy)."""
+    h, w = xb.shape
+    xp = jnp.pad(xb, ((r, r), (r, r)))
+    return jax.lax.slice(xp, (r + dr, r + dc), (r + dr + h, r + dc + w))
+
+
+def _resident_kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, T: int,
+                     H: int, W: int, bc_value: float | None):
+    """T iterations with the whole grid in VMEM; the rim is *refreshed*
+    (out-of-grid zeroed, shell re-pinned) every iteration instead of being
+    carried in a T·r-deep halo, so no work is redundant and T is unbounded.
+    """
+    xb = x_ref[0].astype(jnp.float32)  # (Hp, Wp) — the entire padded grid
+    rows = jax.lax.broadcasted_iota(jnp.int32, xb.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, xb.shape, 1)
+    in_array = (rows < H) & (cols < W)
+    shell = in_array & ~(
+        (rows >= 1) & (rows < H - 1) & (cols >= 1) & (cols < W - 1)
+    )
+    xb = jnp.where(in_array, xb, 0.0)
+    if bc_value is not None:
+        xb = jnp.where(shell, np.float32(bc_value), xb)
+
+    for _ in range(T):
+        acc = None
+        for off, wgt in spec.taps:
+            term = _shift2d_zfill(xb, off[0], off[1], r) * np.float32(wgt)
+            acc = term if acc is None else acc + term
+        acc = jnp.where(in_array, acc, 0.0)
+        if bc_value is not None:
+            acc = jnp.where(shell, np.float32(bc_value), acc)
+        xb = acc
+
+    o_ref[0] = xb.astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("spec", "fuse", "block_h", "bc_value", "interpret"),
+    static_argnames=("spec", "fuse", "block_h", "bc_value", "interpret",
+                     "rim"),
 )
 def jacobi2d_fused_step(
     x: jnp.ndarray,
@@ -84,11 +142,14 @@ def jacobi2d_fused_step(
     block_h: int = 256,
     bc_value: float | None = None,
     interpret: bool | None = None,
+    rim: str = "trapezoid",
 ) -> jnp.ndarray:
     """``fuse`` Jacobi iterations in one kernel pass.  x: (batch, H, W).
 
     Assumes the Dirichlet shell of x is already set (wrapper does this);
     with bc_value=None computes ``fuse`` raw zero-padded stencil steps.
+    ``rim`` selects the fusion geometry (see module docstring); the
+    "resident" strategy requires the grid to fit one VMEM block.
     """
     if spec.ndim != 2:
         raise ValueError("jacobi2d_fused_step needs a 2D spec")
@@ -97,12 +158,30 @@ def jacobi2d_fused_step(
             "temporal fusion would need halo-replicated per-cell weight "
             "fields; variable-coefficient specs run the direct stencil2d "
             "kernel instead")
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = default_interpret(interpret)
     B, H, W = x.shape
     r = spec.radius
-    bh, Hp, Wp, halo = fused_block_geometry(H, W, fuse, r, block_h)
+    bh, Hp, Wp, halo = fused_block_geometry(H, W, fuse, r, block_h, rim)
     xp = jnp.pad(x, ((0, 0), (0, Hp - H), (0, Wp - W)))
+
+    if rim == "resident":
+        if not resident_fits((H, W), np.dtype(np.float32).itemsize):
+            raise ValueError(
+                f"rim='resident' needs the whole {H}x{W} grid in one VMEM "
+                f"block; use rim='trapezoid' for grids this large")
+        kern = functools.partial(
+            _resident_kernel, spec=spec, r=r, T=fuse, H=H, W=W,
+            bc_value=bc_value,
+        )
+        out = pl.pallas_call(
+            kern,
+            grid=(B,),
+            in_specs=[pl.BlockSpec((1, Hp, Wp), lambda b: (b, 0, 0))],
+            out_specs=pl.BlockSpec((1, Hp, Wp), lambda b: (b, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((B, Hp, Wp), x.dtype),
+            interpret=interpret,
+        )(xp)
+        return out[:, :H, :W]
 
     kern = functools.partial(
         _kernel, spec=spec, r=r, T=fuse, block_h=bh, H=H, W=W, bc_value=bc_value

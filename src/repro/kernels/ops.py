@@ -24,7 +24,8 @@ from repro.kernels.stencil3d import stencil3d
 
 @functools.partial(
     jax.jit,
-    static_argnames=("spec", "iterations", "fuse", "block_h", "bc_value", "interpret"),
+    static_argnames=("spec", "iterations", "fuse", "block_h", "bc_value",
+                     "interpret", "rim"),
 )
 def jacobi2d(
     x0: jnp.ndarray,
@@ -35,11 +36,13 @@ def jacobi2d(
     fuse: int = 1,
     block_h: int = 256,
     interpret: bool | None = None,
+    rim: str = "trapezoid",
 ) -> jnp.ndarray:
     """``iterations`` Jacobi steps on (batch, H, W) via the Pallas kernels.
 
     fuse=1 streams one iteration per HBM round-trip (the paper-faithful
-    pipeline); fuse=T applies temporal blocking (beyond-paper, §Perf).
+    pipeline); fuse=T applies temporal blocking (beyond-paper, §Perf) with
+    ``rim`` selecting the fusion geometry (see jacobi_fused.py).
     ``iterations`` must be divisible by ``fuse``.  Variable-coefficient
     specs cannot temporally fuse (the fields would need halo replication);
     they scan the direct ``stencil2d`` kernel one iteration per pass.
@@ -60,7 +63,7 @@ def jacobi2d(
         def body(x, _):
             y = jacobi2d_fused_step(
                 x, spec, fuse=fuse, block_h=block_h, bc_value=bc_value,
-                interpret=interpret,
+                interpret=interpret, rim=rim,
             )
             return y, None
 

@@ -24,7 +24,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.stencil import StencilSpec, WeightField
-from repro.kernels.tiling import halo_block_spec, round_up, shift2d
+from repro.kernels.tiling import (default_interpret, halo_block_spec,
+                                  round_up, shift2d)
 
 
 def _stencil_block(xb: jnp.ndarray, spec: StencilSpec, r: int,
@@ -86,8 +87,7 @@ def stencil2d(
     """
     if spec.ndim != 2:
         raise ValueError("stencil2d needs a 2D spec")
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = default_interpret(interpret)
     B, H, W = x.shape
     r = spec.radius
     bh = min(block_h, round_up(H, 8))

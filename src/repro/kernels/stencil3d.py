@@ -16,7 +16,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.stencil import StencilSpec, WeightField
-from repro.kernels.tiling import halo_block_spec, round_up
+from repro.kernels.tiling import default_interpret, halo_block_spec, round_up
 
 
 def _shift3d(xb: jnp.ndarray, dz: int, dx: int, dy: int, r: int) -> jnp.ndarray:
@@ -86,8 +86,7 @@ def stencil3d(
     """
     if spec.ndim != 3:
         raise ValueError("stencil3d needs a 3D spec")
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = default_interpret(interpret)
     B, Z, X, Y = x.shape
     r = spec.radius
     bx = min(block_x, round_up(X, 8))

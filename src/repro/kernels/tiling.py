@@ -32,6 +32,19 @@ def tpu_compiler_params(**kwargs):
     return cls(**kwargs)
 
 
+def default_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel's ``interpret`` argument: None means "interpret iff
+    this process has no native Pallas lowering" (CPU hosts).
+
+    Single source of truth for every Pallas kernel in this package — and for
+    ``core/plan.py``, which records the resolved value on the plan so the
+    dispatcher can tell an interpreted execution from a compiled one.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend() == "cpu"
+
+
 def round_up(v: int, m: int) -> int:
     """Smallest multiple of ``m`` that is >= ``v``."""
     return (v + m - 1) // m * m
@@ -47,31 +60,61 @@ def shift2d(xb: jnp.ndarray, dr: int, dc: int, r: int) -> jnp.ndarray:
     return jax.lax.slice(xb, (r + dr, r + dc), (h - r + dr, w - r + dc))
 
 
+# A "resident" block must hold the whole padded grid in VMEM (~16 MB/core)
+# with room for the accumulator and double buffering.
+RESIDENT_VMEM_BYTES = 8 * 1024 * 1024
+
+
+def resident_fits(grid_shape: tuple[int, int], itemsize: int = 4) -> bool:
+    """Whether the whole (padded) grid fits one VMEM-resident block."""
+    H, W = grid_shape
+    return round_up(H, 8) * round_up(W, 128) * itemsize <= RESIDENT_VMEM_BYTES
+
+
 def fused_block_geometry(H: int, W: int, fuse: int, r: int,
-                         block_h: int = 256) -> tuple[int, int, int, int]:
+                         block_h: int = 256,
+                         rim: str = "trapezoid") -> tuple[int, int, int, int]:
     """Block geometry of the temporally-fused 2D Jacobi kernel.
 
     Returns ``(bh, Hp, Wp, halo)``: the row-block height, the padded grid
-    extents, and the per-side halo depth (``fuse * r``).  This is the single
-    source of truth shared by ``jacobi_fused.py`` (which tiles with it) and
-    the ``plan.py`` roofline model (which prices the rim recompute it
-    implies).
+    extents, and the per-side halo depth.  This is the single source of
+    truth shared by ``jacobi_fused.py`` (which tiles with it) and the
+    ``plan.py`` roofline model (which prices the rim recompute it implies).
+
+    Rim strategies: ``"trapezoid"`` tiles rows into overlapping blocks whose
+    halo deepens with the fuse depth (``fuse * r`` per side — the classic
+    overlapped-tiling scheme, redundant rim recompute); ``"resident"`` keeps
+    the *whole* grid in one VMEM block and re-zeroes a depth-``r`` halo
+    between in-kernel iterations — no redundancy and no depth limit, legal
+    only when the grid fits VMEM (:func:`resident_fits`).  The resident
+    strategy is the TPU analogue of the WSE's grid-stays-in-SRAM execution
+    and unlocks the fuse depths the trapezoid geometry rejects.
     """
+    Wp = round_up(W, 128)
+    if rim == "resident":
+        Hp = round_up(H, 8)
+        return Hp, Hp, Wp, r
+    if rim != "trapezoid":
+        raise ValueError(f"unknown rim strategy {rim!r} "
+                         f"(expected 'trapezoid' or 'resident')")
     halo = fuse * r
     bh = min(block_h, round_up(H, 8))
     Hp = round_up(H, bh)
-    Wp = round_up(W, 128)
     return bh, Hp, Wp, halo
 
 
 def fuse_redundancy(grid_shape: tuple[int, int], fuse: int, r: int,
-                    block_h: int = 256) -> float:
-    """Rim-recompute factor of the depth-``fuse`` trapezoid: elements each
+                    block_h: int = 256, rim: str = "trapezoid") -> float:
+    """Rim-recompute factor of the depth-``fuse`` schedule: elements each
     block touches divided by elements it owns.  1.0 means no redundant work;
     the cost model multiplies compute time by this when pricing a fuse depth.
+    The resident strategy recomputes nothing (its rim is re-zeroed, not
+    re-derived from a deeper halo).
     """
+    if rim == "resident":
+        return 1.0
     H, W = grid_shape
-    bh, _, Wp, halo = fused_block_geometry(H, W, fuse, r, block_h)
+    bh, _, Wp, halo = fused_block_geometry(H, W, fuse, r, block_h, rim)
     return ((bh + 2 * halo) * (Wp + 2 * halo)) / (bh * Wp)
 
 
