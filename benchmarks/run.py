@@ -2,9 +2,9 @@
 Prints ``name,us_per_call,derived`` CSV rows and (with ``--json``) writes a
 machine-readable artifact so the perf trajectory is trackable across commits.
 
-JSON schema (stable, version 4):
+JSON schema (stable, version 5):
 
-  {"schema": 4,
+  {"schema": 5,
    "us_per_call": {row name: microseconds per timed call},
    "interpreted_rows": [row names whose timing came from interpret-mode
                         Pallas — structurally tagged so consumers exclude
@@ -27,12 +27,20 @@ JSON schema (stable, version 4):
                               "source": "roofline"|"tuned"|"explicit",
                               "fuse": int, "rim": str|null,
                               "s_per_iter": float, "interpreted": bool,
-                              "candidates_measured": int}}}
+                              "candidates_measured": int}},
+   "scaling":     {row name: {"mesh": [n_row, n_col], "grid": [H, W],
+                              "fuse": int, "iters": int,
+                              # timed rows (weak/strong/fuse-sweep):
+                              "s_per_iter": float, "comm_rounds": int,
+                              # the scaling/equivalence row instead:
+                              "max_err": float, "converged": bool}}}
 
 Sections may return either a list of CSV rows or (rows, metrics dict);
 metric keys starting with ``multigrid/`` land in the ``multigrid`` section,
-``autotune/`` in ``autotune``, everything else in ``solver``.  Any metric
-row carrying ``"interpreted": true`` also lands its name in the top-level
+``autotune/`` in ``autotune``, ``scaling/`` in ``scaling`` (the
+forced-8-device distributed rows from benchmarks/scaling_bench.py),
+everything else in ``solver``.  Any metric row carrying
+``"interpreted": true`` also lands its name in the top-level
 ``interpreted_rows`` list.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only table1_2d ...]
@@ -54,6 +62,7 @@ _ALIASES = {
     "stencil_fuse_sweep": "stencil-fuse",
     "multigrid_bench": "multigrid",
     "autotune_bench": "autotune",
+    "scaling_bench": "scaling",
 }
 
 
@@ -63,15 +72,15 @@ def main() -> int:
                     help="smaller step counts (CI)")
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write the schema-4 JSON artifact "
+                    help="also write the schema-5 JSON artifact "
                          "({schema, us_per_call, interpreted_rows, solver, "
-                         "multigrid, autotune})")
+                         "multigrid, autotune, scaling})")
     args = ap.parse_args()
     only = ({_ALIASES.get(o, o) for o in args.only} if args.only else None)
 
     from benchmarks import (autotune_bench, fig5_shapes, fig6_3d,
-                            multigrid_bench, roofline, stencil_fuse_sweep,
-                            table1_2d)
+                            multigrid_bench, roofline, scaling_bench,
+                            stencil_fuse_sweep, table1_2d)
 
     sections = {
         "table1": lambda: table1_2d.run(steps=4 if args.fast else 8,
@@ -85,6 +94,7 @@ def main() -> int:
         "autotune": lambda: autotune_bench.run(
             iters=20 if args.fast else 100,
             tune_iters=20, repeats=1 if args.fast else 3),
+        "scaling": lambda: scaling_bench.run(smoke=args.fast),
     }
     failed = 0
     if only:
@@ -97,6 +107,7 @@ def main() -> int:
     solver_metrics: dict[str, dict] = {}
     mg_metrics: dict[str, dict] = {}
     tune_metrics: dict[str, dict] = {}
+    scaling_metrics: dict[str, dict] = {}
     interpreted_rows: list[str] = []
     print("name,us_per_call,derived")
     for name, fn in sections.items():
@@ -111,6 +122,8 @@ def main() -> int:
                         mg_metrics[k] = v
                     elif k.startswith("autotune/"):
                         tune_metrics[k] = v
+                    elif k.startswith("scaling/"):
+                        scaling_metrics[k] = v
                     else:
                         solver_metrics[k] = v
                     if isinstance(v, dict) and v.get("interpreted"):
@@ -135,16 +148,16 @@ def main() -> int:
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
     if args.json:
-        payload = {"schema": 4, "us_per_call": results,
+        payload = {"schema": 5, "us_per_call": results,
                    "interpreted_rows": sorted(interpreted_rows),
                    "solver": solver_metrics, "multigrid": mg_metrics,
-                   "autotune": tune_metrics}
+                   "autotune": tune_metrics, "scaling": scaling_metrics}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {len(results)} timing rows + {len(solver_metrics)} "
               f"solver rows + {len(mg_metrics)} multigrid rows + "
-              f"{len(tune_metrics)} autotune rows to "
-              f"{args.json}", file=sys.stderr)
+              f"{len(tune_metrics)} autotune rows + {len(scaling_metrics)} "
+              f"scaling rows to {args.json}", file=sys.stderr)
     return 1 if failed else 0
 
 

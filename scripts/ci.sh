@@ -6,14 +6,18 @@
 #                              runs) + the fast stencil benchmark
 #   scripts/ci.sh --all        full tier: every test (matrix + solver +
 #                              distributed) + the table1/fig6 benchmark
-#                              sections
+#                              sections + the scaling smoke
 #   scripts/ci.sh --tune-check validate the committed TUNED_stencil.json only
 #                              (schema + every entry maps to a legal
 #                              backend_support cell) and exit
+#   scripts/ci.sh --scaling-smoke
+#                              run the forced-8-host-device weak-scaling
+#                              benchmark one row deep and validate the
+#                              schema-5 `scaling` section, then exit
 #
-# Both test tiers refresh BENCH_stencil.json (schema 4: us_per_call +
-# interpreted_rows + solver + multigrid + autotune metrics) so the perf
-# trajectory and the cost-model regression tests in
+# Both test tiers refresh BENCH_stencil.json (schema 5: us_per_call +
+# interpreted_rows + solver + multigrid + autotune + scaling metrics) so the
+# perf trajectory and the cost-model regression tests in
 # tests/solver/test_cost_model.py stay anchored to this host, and both run
 # the tune-check so a stale/illegal tuned table fails CI.
 set -euo pipefail
@@ -26,15 +30,28 @@ tune_check() {
   python -m repro.core.autotune --check TUNED_stencil.json
 }
 
+scaling_smoke() {
+  echo "== scaling smoke (8 forced host devices, one weak row + fuse sweep) =="
+  local out
+  out="$(mktemp /tmp/BENCH_scaling_smoke.XXXXXX.json)"
+  python -m benchmarks.scaling_bench --smoke --json "$out"
+  python -m benchmarks.scaling_bench --validate "$out"
+  rm -f "$out"
+}
+
 if [[ "${1:-}" == "--tune-check" ]]; then
   tune_check
+  exit 0
+elif [[ "${1:-}" == "--scaling-smoke" ]]; then
+  scaling_smoke
   exit 0
 elif [[ "${1:-}" == "--all" ]]; then
   tune_check
   echo "== full test suite (matrix + solver + distributed tiers) =="
   python -m pytest -x -q
-  echo "== stencil benchmark (table1 + fig6 + multigrid + autotune) =="
-  python -m benchmarks.run --only table1_2d fig6_3d multigrid autotune --json BENCH_stencil.json
+  scaling_smoke
+  echo "== stencil benchmark (table1 + fig6 + multigrid + autotune + scaling) =="
+  python -m benchmarks.run --only table1_2d fig6_3d multigrid autotune scaling --json BENCH_stencil.json
 else
   tune_check
   echo "== fast test tier (-m 'not slow') =="

@@ -48,6 +48,8 @@ DEFAULT_TABLE_NAME = "TUNED_stencil.json"
 FUSE_CANDIDATES = (1, 2, 4, 8, 16)
 RESIDENT_FUSE_CANDIDATES = (16, 32, 64)
 BLOCK_H_CANDIDATES = (64, 128, 256)
+# Deep-halo fuse depths swept per mesh shape (clamped to the local tile).
+HALO_FUSE_CANDIDATES = (1, 2, 4, 8)
 
 
 class TableError(ValueError):
@@ -127,6 +129,11 @@ class TunedEntry:
     rim: str | None = None
     interpreted: bool = False
     iters: int = 1          # iterations per timed call during measurement
+    # Device-mesh tiling (n_row, n_col) a halo schedule was measured on —
+    # halo timings do not transfer across mesh shapes, so lookups filter on
+    # it.  None for every single-device backend (backward compatible with
+    # pre-mesh tables).
+    mesh: tuple[int, int] | None = None
 
     @property
     def cell(self) -> tuple:
@@ -138,6 +145,10 @@ class TunedEntry:
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
         d["bucket"] = list(self.bucket)
+        if self.mesh is not None:
+            d["mesh"] = list(self.mesh)
+        else:
+            del d["mesh"]
         return d
 
     @classmethod
@@ -152,6 +163,8 @@ class TunedEntry:
             raise TableError(f"entry missing fields {sorted(missing)}")
         d = dict(d)
         d["bucket"] = tuple(int(v) for v in d["bucket"])
+        if d.get("mesh") is not None:
+            d["mesh"] = tuple(int(v) for v in d["mesh"])
         return cls(**d)
 
 
@@ -178,10 +191,11 @@ class TunedTable:
 
     def add(self, entry: TunedEntry) -> None:
         """Insert, replacing any entry with the same cell + schedule key."""
-        key = (entry.cell, entry.backend, entry.fuse, entry.block_h, entry.rim)
+        key = (entry.cell, entry.backend, entry.fuse, entry.block_h,
+               entry.rim, entry.mesh)
         self.entries = [
             e for e in self.entries
-            if (e.cell, e.backend, e.fuse, e.block_h, e.rim) != key
+            if (e.cell, e.backend, e.fuse, e.block_h, e.rim, e.mesh) != key
         ]
         self.entries.append(entry)
 
@@ -195,14 +209,23 @@ class TunedTable:
         dtype: str,
         *,
         max_distance: float | None = None,
+        mesh_shape: tuple[int, int] | None = None,
     ) -> list[TunedEntry]:
-        """Entries of the nearest recorded bucket; [] if none is close."""
+        """Entries of the nearest recorded bucket; [] if none is close.
+
+        ``mesh_shape`` is the (n_row, n_col) device tiling the caller will
+        run on: mesh-keyed (halo) entries only apply when it matches, while
+        mesh-less entries (every single-device schedule) always do.
+        """
         want = shape_bucket(tuple(grid_shape))
         if max_distance is None:
             max_distance = float(len(want))
         near = [e for e in self.entries
                 if e.device_kind == device_kind and e.family == family
-                and e.dtype == dtype]
+                and e.dtype == dtype
+                and (e.mesh is None
+                     or (mesh_shape is not None
+                         and tuple(e.mesh) == tuple(mesh_shape)))]
         if not near:
             return []
         best = min({e.bucket for e in near},
@@ -219,10 +242,12 @@ class TunedTable:
         dtype: str,
         *,
         max_distance: float | None = None,
+        mesh_shape: tuple[int, int] | None = None,
     ) -> TunedEntry | None:
         """The fastest non-interpreted schedule for the cell, or None."""
         cell = self.lookup_cell(device_kind, family, grid_shape, dtype,
-                                max_distance=max_distance)
+                                max_distance=max_distance,
+                                mesh_shape=mesh_shape)
         live = [e for e in cell if not e.interpreted]
         if not live:
             return None
@@ -411,15 +436,21 @@ def measure_candidate(
     batch: int = 1,
     repeats: int = 3,
     device_kind: str | None = None,
+    mesh=None,
 ) -> TunedEntry:
-    """Lower one schedule through ``make_plan`` and time it."""
-    from repro.core.plan import make_plan
+    """Lower one schedule through ``make_plan`` and time it.
+
+    ``mesh`` is required for (and only used by) halo candidates; the entry
+    records its (n_row, n_col) tiling so lookups stay mesh-exact.
+    """
+    from repro.core.plan import _mesh_tiling, make_plan
     if device_kind is None:
         device_kind = jax.default_backend()
     plan = make_plan(
         spec, grid_shape, backend=cand.backend, bc=bc, mode=mode,
         iters=iters, fuse=cand.fuse if cand.rim or cand.fuse > 1 else None,
-        block_h=cand.block_h, rim=cand.rim, dtype=dtype, tuned=None)
+        block_h=cand.block_h, rim=cand.rim, dtype=dtype, mesh=mesh,
+        tuned=None)
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((batch, *grid_shape)), dtype)
     sec = _median_seconds(plan, x, repeats=repeats)
@@ -435,6 +466,7 @@ def measure_candidate(
         rim=cand.rim,
         interpreted=plan.interpreted,
         iters=iters,
+        mesh=_mesh_tiling(mesh) if cand.backend == "halo" else None,
     )
 
 
@@ -474,6 +506,64 @@ def autotune_cell(
     return table
 
 
+def halo_schedule_candidates(
+    spec: StencilSpec,
+    grid_shape: tuple[int, ...],
+    mesh_tiling: tuple[int, int],
+    iters: int,
+) -> list[Candidate]:
+    """Legal halo fuse depths for one (grid, mesh) cell: each candidate must
+    divide the chunk and keep the exchanged depth within the local tile."""
+    from repro.core.distributed import max_halo_fuse
+    n_row, n_col = mesh_tiling
+    if grid_shape[0] % n_row or grid_shape[1] % n_col:
+        return []
+    deepest = max_halo_fuse(spec.radius, grid_shape[0] // n_row,
+                            grid_shape[1] // n_col)
+    return [Candidate("halo", fuse=f) for f in HALO_FUSE_CANDIDATES
+            if f <= deepest and iters % f == 0]
+
+
+def autotune_halo_cell(
+    spec: StencilSpec,
+    grid_shape: tuple[int, ...],
+    mesh,
+    *,
+    iters: int = 32,
+    dtype=jnp.float32,
+    bc: DirichletBC | float | None = 0.0,
+    table: TunedTable | None = None,
+    repeats: int = 3,
+    verbose: bool = False,
+) -> TunedTable:
+    """Measure the halo fuse-depth sweep for one cell on ``mesh``.
+
+    The distributed analogue of :func:`autotune_cell`: entries carry the
+    mesh tiling so they only ever apply to the mesh shape they were measured
+    on.  Run on the forced-8-host-device mesh (``scaling_bench.py
+    --write-tuned``) to persist halo schedules into the committed table.
+    """
+    from repro.core.plan import _mesh_tiling
+    if table is None:
+        table = TunedTable()
+    tiling = _mesh_tiling(mesh)
+    for cand in halo_schedule_candidates(spec, grid_shape, tiling, iters):
+        try:
+            entry = measure_candidate(spec, grid_shape, cand, iters=iters,
+                                      dtype=dtype, bc=bc, repeats=repeats,
+                                      mesh=mesh)
+        except Exception as e:
+            warnings.warn(f"autotune: halo candidate {cand} failed: {e}",
+                          stacklevel=2)
+            continue
+        table.add(entry)
+        if verbose:
+            print(f"# tuned {entry.family} {entry.bucket} halo/f{entry.fuse}"
+                  f" @ mesh {tiling[0]}x{tiling[1]}: "
+                  f"{entry.us_per_iter:.1f} us/iter")
+    return table
+
+
 # ---------------------------------------------------------------------------
 # Validation (scripts/ci.sh --tune-check)
 # ---------------------------------------------------------------------------
@@ -503,13 +593,26 @@ def validate_table(data: dict) -> list[str]:
         if any(b < 1 for b in e.bucket):
             errors.append(f"{where}: malformed bucket")
             continue
+        if e.backend == "halo":
+            if e.mesh is None:
+                errors.append(f"{where}: halo entries must record the mesh "
+                              f"tiling they were measured on")
+                continue
+            if len(e.mesh) != 2 or any(m < 1 for m in e.mesh):
+                errors.append(f"{where}: malformed mesh {e.mesh}")
+                continue
+        elif e.mesh is not None:
+            errors.append(f"{where}: mesh is a halo-only field "
+                          f"(single-device schedules transfer across meshes)")
+            continue
         try:
             rep = family_representative(e.family, e.bucket)
         except TableError as err:
             errors.append(f"{where}: {err}")
             continue
         sup = backend_support(e.backend, rep, grid_shape=e.bucket,
-                              mode=BoundaryMode.MASK, bc=0.0)
+                              mode=BoundaryMode.MASK, bc=0.0,
+                              mesh=e.mesh)
         if not sup:
             errors.append(f"{where}: no longer a legal backend_support "
                           f"cell: {sup.reason}")

@@ -158,9 +158,6 @@ def backend_support(
     if backend == "halo":
         if nd != 2:
             return _no("halo-exchange distribution is 2D (distributed.py)")
-        if variable:
-            return _no("per-cell weight fields are not sharded across the "
-                       "device mesh yet (single-device backends only)")
         if raw:
             return _no("distributed jacobi bakes in the Dirichlet fixup")
         if mode is not BoundaryMode.MASK:
@@ -181,11 +178,31 @@ def backend_support(
     raise AssertionError(backend)
 
 
+def _halo_fuse_legal(fuse: int, spec: StencilSpec,
+                     grid_shape: tuple[int, ...], mesh) -> bool:
+    """Whether a depth-``fuse`` halo schedule is executable on this cell:
+    the exchanged depth ``radius*fuse`` cannot exceed the local tile extent
+    (one exchange phase only reaches the adjacent shard)."""
+    tiling = _mesh_tiling(mesh)
+    if tiling is None:
+        return False
+    n_row, n_col = tiling
+    if grid_shape[0] % n_row or grid_shape[1] % n_col:
+        return False
+    from repro.core.distributed import max_halo_fuse
+    return fuse <= max_halo_fuse(spec.radius, grid_shape[0] // n_row,
+                                 grid_shape[1] // n_col)
+
+
 def _mesh_tiling(mesh) -> tuple[int, int] | None:
     """(n_row, n_col) of the first two mesh axes; None if the mesh can't
-    host a 2D tile decomposition."""
+    host a 2D tile decomposition.  Accepts a bare (n_row, n_col) tuple so
+    cost-model callers (and tuned-table validation) can price a mesh shape
+    without materializing devices."""
     if mesh is None:
         return 1, 1
+    if isinstance(mesh, tuple):
+        return (int(mesh[0]), int(mesh[1])) if len(mesh) >= 2 else None
     names = mesh.axis_names
     if len(names) < 2:
         return None
@@ -223,6 +240,11 @@ DEVICE_PROFILES = {
 # magnitude off; the model only needs it to never win on CPU.
 _INTERPRET_PENALTY = 1e4
 
+# Fixed latency of one ppermute round (dispatch + link setup), per the four
+# rounds each halo exchange runs; deep-halo fusion divides the rounds by the
+# fuse depth, which is exactly what this term lets the model see.
+_PERMUTE_LATENCY = 2.5e-6
+
 
 def _resolve_fuse(iters: int) -> int:
     """The fuse depth pallas_fused actually runs at for ``iters`` (the same
@@ -240,6 +262,7 @@ def estimate_seconds(
     *,
     itemsize: int = 4,
     fuse: int | None = None,
+    mesh_shape: tuple[int, int] | None = None,
 ) -> float:
     """Roofline-style time estimate for ``iters`` applications on one step.
 
@@ -248,6 +271,13 @@ def estimate_seconds(
     pays the trapezoid's rim recompute.  ``fuse=None`` prices the depth
     ``make_plan`` would resolve for ``iters``; passing an explicit depth lets
     callers (the solver's fuse auto-selection) compare candidate depths.
+
+    For ``halo`` the model adds a communication term per exchange — perimeter
+    bytes over ``collective_bw`` plus four ppermute latencies — divided by
+    the fuse depth (deep-halo fusion's whole point), with the trapezoid rim
+    recompute scaling the local compute.  ``mesh_shape`` is the (n_row,
+    n_col) device tiling the perimeter is measured against; None prices a
+    1x1 mesh (per-device compute unchanged, latency floor still paid).
     """
     n = int(np.prod(grid_shape))
     n_var = spec.num_variable_taps
@@ -284,12 +314,30 @@ def estimate_seconds(
             # ... at the price of recomputing the overlapping block rims
             compute *= fuse_redundancy(grid_shape, fuse, spec.radius)
 
+    if backend == "halo":
+        from repro.kernels.tiling import (halo_exchange_bytes,
+                                          halo_fuse_redundancy)
+        n_row, n_col = mesh_shape or (1, 1)
+        local = (grid_shape[0] // max(n_row, 1),
+                 grid_shape[1] // max(n_col, 1))
+        f = fuse if fuse and fuse > 1 else 1
+        # Per-device compute: each device owns 1/(n_row*n_col) of the grid
+        # but recomputes the trapezoid rim at depth f.
+        shard = max(n_row * n_col, 1)
+        per_iter = max(compute * halo_fuse_redundancy(local, f, spec.radius),
+                       mem) / shard
+        # A 1x1 mesh still dispatches the four (non-wrapping) permute rounds
+        # but moves no neighbour data — latency floor only.
+        wire_bytes = halo_exchange_bytes(local, f, spec.radius, itemsize) \
+            if shard > 1 else 0
+        comm_per_exchange = (wire_bytes / device.collective_bw
+                             + 4 * _PERMUTE_LATENCY)
+        return per_iter * iters + (iters / f) * comm_per_exchange
+
     per_iter = max(compute, mem)
     total = per_iter * iters
     if backend in ("pallas", "pallas_fused") and not device.pallas_native:
         total *= _INTERPRET_PENALTY
-    if backend == "halo":
-        total += 1e-5 * iters  # per-iteration ppermute latency floor
     return total
 
 
@@ -335,13 +383,15 @@ def choose_backend(
     if device_kind is None:
         device_kind = jax.default_backend()
     device = DEVICE_PROFILES.get(device_kind, DEVICE_PROFILES["cpu"])
+    mesh_shape = _mesh_tiling(mesh) if mesh is not None else None
 
     # -- measured table first ---------------------------------------------
     from repro.core import autotune
     table = autotune.resolve_table(tuned)
     if table is not None and len(table):
         cell = table.lookup_cell(device_kind, autotune.spec_family(spec),
-                                 tuple(grid_shape), autotune.dtype_key(dtype))
+                                 tuple(grid_shape), autotune.dtype_key(dtype),
+                                 mesh_shape=mesh_shape)
         measured: dict[str, float] = {}
         for e in cell:
             if e.interpreted or e.backend in measured and \
@@ -368,7 +418,9 @@ def choose_backend(
                                bc=bc, mesh=mesh):
             continue
         costs[b] = estimate_seconds(b, spec, grid_shape, iters, device,
-                                    fuse=fuse)
+                                    fuse=fuse,
+                                    mesh_shape=mesh_shape if b == "halo"
+                                    else None)
         if interpret is True and b in ("pallas", "pallas_fused") \
                 and device.pallas_native:
             costs[b] *= _INTERPRET_PENALTY
@@ -510,10 +562,15 @@ def make_plan(
         table = autotune.resolve_table(tuned)
         entry = table.lookup(
             device_kind or jax.default_backend(), autotune.spec_family(spec),
-            tuple(grid_shape), autotune.dtype_key(dtype)) if table else None
+            tuple(grid_shape), autotune.dtype_key(dtype),
+            mesh_shape=_mesh_tiling(mesh) if mesh is not None else None) \
+            if table else None
         if entry is not None and entry.backend == backend:
             source = "tuned"
-            if fuse is None and entry.fuse > 1 and iters % entry.fuse == 0:
+            if fuse is None and entry.fuse > 1 and iters % entry.fuse == 0 \
+                    and (backend != "halo"
+                         or _halo_fuse_legal(entry.fuse, spec, grid_shape,
+                                             mesh)):
                 fuse = entry.fuse
             if block_h is None:
                 block_h = entry.block_h
@@ -525,23 +582,31 @@ def make_plan(
         raise ValueError(f"backend {backend!r} unsupported here: {sup.reason}")
 
     # ``fuse`` is a hint for the 2D Pallas paths (both scalar-bc and raw
-    # execute in fuse-sized chunks); every other backend ignores it and the
+    # execute in fuse-sized chunks) and for halo (one deep-halo exchange per
+    # ``fuse`` local iterations); every other backend ignores it and the
     # plan records fuse=1 so its metadata reflects what actually runs.
-    fusing = (backend == "pallas_fused" or (backend == "pallas"
-                                            and spec.ndim == 2)) \
-        and not spec.is_variable
-    if not fusing:
-        fuse = 1
-        rim = None
-    elif fuse is None:
-        if rim == "resident":
-            fuse = iters  # the whole chunk stays resident in VMEM
-        else:
-            fuse = _resolve_fuse(iters) if backend == "pallas_fused" else 1
-    elif iters % fuse:
-        raise ValueError(f"iters={iters} not divisible by fuse={fuse}")
-    if fusing and rim is None and fuse > 1:
-        rim = "trapezoid"
+    if backend == "halo":
+        rim = None  # depth-vs-tile legality is make_halo_runner's check
+        if fuse is None:
+            fuse = 1
+        elif iters % fuse:
+            raise ValueError(f"iters={iters} not divisible by fuse={fuse}")
+    else:
+        fusing = (backend == "pallas_fused" or (backend == "pallas"
+                                                and spec.ndim == 2)) \
+            and not spec.is_variable
+        if not fusing:
+            fuse = 1
+            rim = None
+        elif fuse is None:
+            if rim == "resident":
+                fuse = iters  # the whole chunk stays resident in VMEM
+            else:
+                fuse = _resolve_fuse(iters) if backend == "pallas_fused" else 1
+        elif iters % fuse:
+            raise ValueError(f"iters={iters} not divisible by fuse={fuse}")
+        if fusing and rim is None and fuse > 1:
+            rim = "trapezoid"
 
     from repro.kernels.tiling import default_interpret
     interpreted = backend in ("pallas", "pallas_fused") \
@@ -651,7 +716,7 @@ def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
         row_axis, col_axis = mesh.axis_names[0], mesh.axis_names[1]
         run = make_halo_runner(
             mesh, spec, H=grid_shape[0], W=grid_shape[1], bc_value=bc_value,
-            iterations=iters, row_axis=row_axis, col_axis=col_axis)
+            iterations=iters, row_axis=row_axis, col_axis=col_axis, fuse=fuse)
         return lambda x: run(x.astype(dtype))
 
     raise AssertionError(backend)

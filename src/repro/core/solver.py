@@ -97,37 +97,59 @@ class SolveResult:
 
 def select_fuse(backend: str, spec: StencilSpec, grid_shape: tuple[int, ...],
                 check_every: int, device_kind: str | None = None,
-                tuned="default", dtype=jnp.float32) -> int | None:
+                tuned="default", dtype=jnp.float32, mesh=None) -> int | None:
     """Temporal fuse depth for one chunk: measured if tuned, else roofline.
 
-    Only the 2D Pallas paths fuse; every other backend gets ``None`` (the
-    plan records fuse=1).  A tuned-table entry for this cell whose backend
-    matches supplies the measured depth first (clamped to the largest
-    divisor of ``check_every`` so chunk boundaries land on whole fused
-    passes); the roofline model prices the candidate depths otherwise.
+    The 2D Pallas paths and ``halo`` fuse; every other backend gets ``None``
+    (the plan records fuse=1).  A tuned-table entry for this cell whose
+    backend matches supplies the measured depth first (clamped to the
+    largest divisor of ``check_every`` so chunk boundaries land on whole
+    fused passes); the roofline model prices the candidate depths otherwise.
+
+    For ``halo`` the depth is additionally clamped to what the local tile
+    can host (``max_halo_fuse``) on the (n_row, n_col) tiling of ``mesh``,
+    tuned entries are matched mesh-exactly, and the roofline prices the
+    communication term each depth divides.
     """
-    if backend not in ("pallas", "pallas_fused") or spec.ndim != 2 \
-            or spec.is_variable:
+    halo = backend == "halo" and spec.ndim == 2
+    if not halo and (backend not in ("pallas", "pallas_fused")
+                     or spec.ndim != 2 or spec.is_variable):
         return None
     if device_kind is None:
         device_kind = jax.default_backend()
+
+    mesh_shape = deepest = None
+    if halo:
+        from repro.core.distributed import max_halo_fuse
+        from repro.core.plan import _mesh_tiling
+        mesh_shape = _mesh_tiling(mesh) if mesh is not None else None
+        n_row, n_col = mesh_shape or (1, 1)
+        if grid_shape[0] % n_row or grid_shape[1] % n_col:
+            return None
+        deepest = max_halo_fuse(spec.radius, grid_shape[0] // n_row,
+                                grid_shape[1] // n_col)
 
     from repro.core import autotune
     table = autotune.resolve_table(tuned)
     if table is not None and len(table):
         entry = table.lookup(device_kind, autotune.spec_family(spec),
-                             tuple(grid_shape), autotune.dtype_key(dtype))
+                             tuple(grid_shape), autotune.dtype_key(dtype),
+                             mesh_shape=mesh_shape)
         if entry is not None and entry.backend == backend and entry.fuse >= 1:
             f = min(entry.fuse, check_every)
+            if deepest is not None:
+                f = min(f, deepest)
             while check_every % f:
                 f -= 1
             return f
 
     device = DEVICE_PROFILES.get(device_kind, DEVICE_PROFILES["cpu"])
-    candidates = [f for f in _FUSE_CANDIDATES if check_every % f == 0]
+    candidates = [f for f in _FUSE_CANDIDATES if check_every % f == 0
+                  and (deepest is None or f <= deepest)]
     return min(candidates,
                key=lambda f: estimate_seconds(backend, spec, grid_shape,
-                                              check_every, device, fuse=f))
+                                              check_every, device, fuse=f,
+                                              mesh_shape=mesh_shape))
 
 
 class Solver:
@@ -223,19 +245,21 @@ class Solver:
         if fuse is None:
             fuse = select_fuse(backend, spec, self.grid_shape,
                                self.check_every, device_kind, tuned=tuned,
-                               dtype=dtype)
+                               dtype=dtype, mesh=mesh)
         # A measured entry for this cell carries the rest of the schedule
         # (block shape, rim strategy) beside the fuse depth select_fuse
         # already took from it.
         block_h = rim = None
         entry = None
         from repro.core import autotune
+        from repro.core.plan import _mesh_tiling
         table = autotune.resolve_table(tuned)
         if table is not None and len(table):
             entry = table.lookup(
                 device_kind or jax.default_backend(),
                 autotune.spec_family(spec), self.grid_shape,
-                autotune.dtype_key(dtype))
+                autotune.dtype_key(dtype),
+                mesh_shape=_mesh_tiling(mesh) if mesh is not None else None)
             if entry is not None and entry.backend == backend:
                 block_h, rim = entry.block_h, entry.rim
         # (an explicit fuse that does not divide check_every is rejected by
@@ -253,6 +277,7 @@ class Solver:
                                 and entry.backend == backend else "roofline")
         self.backend = self.plan.backend
         self.fuse = self.plan.fuse
+        self.mesh_shape = _mesh_tiling(mesh) if mesh is not None else None
         if not self.fixed:
             self._loop = jax.jit(self._build_loop())
 
@@ -338,7 +363,8 @@ class Solver:
             self.device_kind or jax.default_backend(), DEVICE_PROFILES["cpu"])
         est = estimate_seconds(
             self.backend, self.spec, self.grid_shape,
-            max(int(iterations.max()), 1), device, fuse=self.fuse)
+            max(int(iterations.max()), 1), device, fuse=self.fuse,
+            mesh_shape=self.mesh_shape)
 
         if squeeze:
             return SolveResult(

@@ -118,6 +118,34 @@ def fuse_redundancy(grid_shape: tuple[int, int], fuse: int, r: int,
     return ((bh + 2 * halo) * (Wp + 2 * halo)) / (bh * Wp)
 
 
+def halo_fuse_redundancy(local_shape: tuple[int, int], fuse: int,
+                         r: int) -> float:
+    """Rim-recompute factor of a depth-``fuse`` deep-halo schedule on one
+    (h_loc, w_loc) device tile: cells updated across the fused sweep divided
+    by cells owned.  Substep ``s`` of the trapezoid computes the tile
+    extended by margin ``(fuse-s)*r``, so the factor grows with depth — the
+    distributed analogue of :func:`fuse_redundancy`, which the halo cost
+    model multiplies compute time by when pricing a fuse depth.
+    """
+    h, w = local_shape
+    if h <= 0 or w <= 0 or fuse <= 1:
+        return 1.0
+    total = sum((h + 2 * (fuse - s) * r) * (w + 2 * (fuse - s) * r)
+                for s in range(1, fuse + 1))
+    return total / (fuse * h * w)
+
+
+def halo_exchange_bytes(local_shape: tuple[int, int], fuse: int, r: int,
+                        itemsize: int = 4) -> int:
+    """Bytes one device moves per deep-halo exchange: two ``r*fuse``-deep
+    edge strips per mesh axis, the row phase widened by the already-attached
+    column halos (the corner transit).  Perimeter-proportional — the
+    communication term of the halo roofline."""
+    h, w = local_shape
+    R = r * fuse
+    return int(2 * R * (h + w + 2 * R) * itemsize)
+
+
 def halo_block_spec(
     block_shape: Sequence[int],
     index_map: Callable[..., tuple],

@@ -2,15 +2,24 @@
 
 The WSE's fabric places grid tiles on a 2D mesh of PEs with single-hop
 neighbour links; a TPU pod's ICI torus is the same topology one level up.
-This module exchanges radius-1 halos (rows then columns — the second phase
+This module exchanges radius-r halos (rows then columns — the second phase
 carries the corners) with *non-wrapping* permutes: edge devices receive
 zeros, matching the zero-padding semantics of the stencil oracle.
+
+Deep halos are the communication-avoiding trick of the wafer-scale scaling
+papers (Rocki et al., Jacquelin et al.): exchanging an ``r*k``-deep halo
+once buys ``k`` local stencil iterations before the next exchange — the
+valid region of the augmented tile shrinks by ``r`` per local step
+(trapezoid-style), so ``ppermute`` rounds drop by ``k`` at the price of rim
+recompute.  ``core/distributed.py`` builds that fused stepper on top of
+:func:`exchange_halo_2d`; the depth is bounded by the local tile extent
+(a device can only forward what it owns — a single exchange phase reaches
+one neighbour deep).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def shard_map_compat(f, mesh, in_specs, out_specs):
@@ -36,9 +45,16 @@ def exchange_1d(xl: jnp.ndarray, axis_name: str, n: int, dim: int, r: int = 1):
     """Gather r-deep halos along ``dim`` from both neighbours on ``axis_name``.
 
     Returns (lo_halo, hi_halo): each has extent r along ``dim``; zeros at the
-    global boundary (non-wrapping permute).
+    global boundary (non-wrapping permute).  ``r`` may exceed the stencil
+    radius (deep halos for temporal fusion) but never the local extent — a
+    single exchange phase only reaches the adjacent shard.
     """
     size = xl.shape[dim]
+    if r > size:
+        raise ValueError(
+            f"halo depth {r} exceeds the local extent {size} along dim {dim} "
+            f"— one exchange phase can only fetch what the adjacent shard "
+            f"owns (shrink the fuse depth or the device mesh)")
     hi_edge = jax.lax.slice_in_dim(xl, size - r, size, axis=dim)
     lo_edge = jax.lax.slice_in_dim(xl, 0, r, axis=dim)
     # neighbour i-1's high edge arrives as our low halo
@@ -52,7 +68,9 @@ def exchange_halo_2d(xl: jnp.ndarray, row_axis: str, col_axis: str,
     """xl: (..., h, w) local tile -> (..., h+2r, w+2r) with halos filled.
 
     Phase 1 exchanges columns, phase 2 exchanges rows of the column-augmented
-    tile so corner halos ride along — supports any radius-r box stencil.
+    tile so corner halos ride along — supports any radius-r box stencil (and
+    any deep-halo depth ``r <= min(h, w)``).  Four ``ppermute`` rounds per
+    call: two directions per axis.
     """
     wdim = xl.ndim - 1
     hdim = xl.ndim - 2

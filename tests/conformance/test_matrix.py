@@ -208,10 +208,16 @@ class TestVariableCoefficientSupport:
                               bc=BC_VALUE)
         assert not sup and "fusion" in sup.reason
 
-    def test_halo_reports_reasoned_skip(self):
+    def test_halo_variable_coefficients_are_live(self):
+        # PR 3 left this cell as a reasoned skip; the fields now shard with
+        # the grid and are halo-exchanged once per chunk, so the cell is
+        # live — and must match the oracle (1x1 mesh runs in-process).
         spec = SPECS["varcoef/2d"]
         sup = backend_support("halo", spec, grid_shape=GRIDS[2], bc=BC_VALUE)
-        assert not sup and "shard" in sup.reason
+        assert sup.ok, sup.reason
+        x = jnp.asarray(RNG.standard_normal((2, *GRIDS[2])), jnp.float32)
+        out = stencil_apply(spec, x, backend="halo", bc=BC_VALUE, iters=ITERS)
+        np.testing.assert_allclose(out, _oracle(spec, x), atol=2e-5)
 
     def test_conv_3d_channels_reports_reasoned_skip(self):
         spec = SPECS["varcoef/3d"]

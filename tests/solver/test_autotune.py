@@ -326,6 +326,88 @@ class TestValidation:
 # Extended fusion geometry
 # ---------------------------------------------------------------------------
 
+class TestMeshKeyedEntries:
+    """Halo schedules are tuned per mesh shape and must stay mesh-exact."""
+
+    def test_mesh_roundtrips_and_is_omitted_when_absent(self, tmp_path):
+        t = TunedTable()
+        t.add(entry("conv", 5.0))
+        t.add(TunedEntry(device_kind="cpu", family=FAM, bucket=GRID,
+                         dtype=F32, backend="halo", us_per_iter=3.0,
+                         fuse=4, mesh=(2, 4)))
+        p = tmp_path / "t.json"
+        t.save(str(p))
+        raw = json.loads(p.read_text())
+        by_backend = {e["backend"]: e for e in raw["entries"]}
+        assert "mesh" not in by_backend["conv"]
+        assert by_backend["halo"]["mesh"] == [2, 4]
+        t2 = TunedTable.load(str(p))
+        halo = next(e for e in t2.entries if e.backend == "halo")
+        assert halo.mesh == (2, 4)
+
+    def test_lookup_filters_on_mesh_shape(self):
+        t = TunedTable()
+        t.add(TunedEntry(device_kind="cpu", family=FAM, bucket=GRID,
+                         dtype=F32, backend="halo", us_per_iter=3.0,
+                         fuse=4, mesh=(2, 4)))
+        t.add(entry("conv", 5.0))
+        # no mesh given: the halo entry is invisible, conv still applies
+        assert t.lookup("cpu", FAM, GRID, F32).backend == "conv"
+        # matching mesh: the (faster) halo entry wins
+        hit = t.lookup("cpu", FAM, GRID, F32, mesh_shape=(2, 4))
+        assert hit.backend == "halo" and hit.fuse == 4
+        # a different mesh shape must not inherit the timing
+        assert t.lookup("cpu", FAM, GRID, F32,
+                        mesh_shape=(2, 2)).backend == "conv"
+
+    def test_select_fuse_takes_mesh_matched_halo_depth(self):
+        t = TunedTable()
+        t.add(TunedEntry(device_kind="cpu", family=FAM, bucket=GRID,
+                         dtype=F32, backend="halo", us_per_iter=3.0,
+                         fuse=8, mesh=(2, 4)))
+        f = select_fuse("halo", SPEC, GRID, 16, "cpu", tuned=t, mesh=(2, 4))
+        assert f == 8
+        # clamped to a divisor of check_every
+        assert select_fuse("halo", SPEC, GRID, 12, "cpu", tuned=t,
+                           mesh=(2, 4)) == 6
+        # and to the depth the local tile can host: (8, 8) over (2, 4)
+        # leaves 4x2 tiles, so the measured 8 collapses to 2
+        assert select_fuse("halo", SPEC, (8, 8), 16, "cpu", tuned=t,
+                           mesh=(2, 4)) == 2
+
+    def test_halo_schedule_candidates_respect_tile_and_chunk(self):
+        from repro.core.autotune import halo_schedule_candidates
+        cands = halo_schedule_candidates(SPEC, (64, 64), (2, 4), 16)
+        assert [c.fuse for c in cands] == [1, 2, 4, 8]
+        assert all(c.backend == "halo" for c in cands)
+        # 12-iteration chunks drop the non-dividing depths
+        assert [c.fuse for c in
+                halo_schedule_candidates(SPEC, (64, 64), (2, 4), 12)] == [1, 2, 4]
+        # tiny tiles clamp the sweep; non-tiling grids yield nothing
+        assert [c.fuse for c in
+                halo_schedule_candidates(SPEC, (8, 8), (2, 4), 16)] == [1, 2]
+        assert halo_schedule_candidates(SPEC, (9, 9), (2, 4), 16) == []
+
+    def test_validation_enforces_mesh_discipline(self):
+        t = TunedTable()
+        t.add(TunedEntry(device_kind="cpu", family=FAM, bucket=GRID,
+                         dtype=F32, backend="halo", us_per_iter=3.0,
+                         fuse=4, mesh=(2, 4)))
+        assert validate_table(t.to_json()) == []
+        # halo without a mesh is an invalid artifact
+        bare = TunedTable()
+        bare.add(entry("halo", 3.0))
+        errs = validate_table(bare.to_json())
+        assert errs and "mesh" in errs[0]
+        # mesh on a single-device backend is equally invalid
+        wrong = TunedTable()
+        wrong.add(TunedEntry(device_kind="cpu", family=FAM, bucket=GRID,
+                             dtype=F32, backend="conv", us_per_iter=3.0,
+                             mesh=(2, 2)))
+        errs = validate_table(wrong.to_json())
+        assert errs and "halo-only" in errs[0]
+
+
 class TestResidentRim:
     def test_resident_matches_reference_deep_fuse(self):
         # Depths the trapezoid geometry rejects outright on a 33x57 grid.

@@ -65,6 +65,53 @@ class TestRooflineModel:
         r8 = fuse_redundancy((64, 64), 8, 1)
         assert 1.0 <= r1 < r8
 
+    def test_halo_comm_term_scales_with_perimeter(self):
+        # The halo communication term is O(perimeter), not O(area): doubling
+        # the grid edge (4x the area) must roughly double the per-exchange
+        # wire bytes on a fixed mesh.
+        from repro.kernels.tiling import halo_exchange_bytes
+        small = halo_exchange_bytes((64, 64), 1, 1)
+        big = halo_exchange_bytes((128, 128), 1, 1)
+        assert 1.9 < big / small < 2.1, (small, big)
+        # and the priced totals preserve that ordering on a slow link
+        spec = laplace_jacobi(2)
+        cpu = DEVICE_PROFILES["cpu"]
+        comm = [estimate_seconds("halo", spec, (g, g), 64, cpu,
+                                 mesh_shape=(2, 4)) for g in (64, 128, 256)]
+        assert comm == sorted(comm), comm
+
+    def test_halo_fuse_pricing_drops_roughly_one_over_fuse(self):
+        # Latency-dominated cell (small tile, cpu collective profile): the
+        # per-exchange cost amortizes over fuse local steps, so pricing must
+        # be monotone decreasing in depth — the communication-avoiding win.
+        spec = laplace_jacobi(2)
+        cpu = DEVICE_PROFILES["cpu"]
+        ests = [estimate_seconds("halo", spec, (64, 64), 16, cpu, fuse=f,
+                                 mesh_shape=(2, 4)) for f in (1, 2, 4, 8)]
+        assert ests == sorted(ests, reverse=True), ests
+        # the drop tracks ~1/fuse while the latency term dominates
+        assert ests[1] < 0.75 * ests[0], ests
+
+    def test_halo_fuse1_pricing_keeps_the_legacy_latency_floor(self):
+        # fuse=1 on an unsharded (1x1) mesh must reproduce the pre-fusion
+        # model exactly: per-iter roofline + 1e-5s of permute latency per
+        # iteration — the backward-compatibility anchor for old cost tables.
+        spec = laplace_jacobi(2)
+        cpu = DEVICE_PROFILES["cpu"]
+        body = estimate_seconds("reference", spec, (64, 64), 16, cpu)
+        halo = estimate_seconds("halo", spec, (64, 64), 16, cpu)
+        assert abs(halo - (body + 1e-5 * 16)) < 1e-12, (halo, body)
+
+    def test_select_fuse_picks_deep_halo_on_latency_dominated_cells(self):
+        spec = laplace_jacobi(2)
+        f = select_fuse("halo", spec, (64, 64), 16, "cpu", tuned=None,
+                        mesh=(2, 4))
+        assert f is not None and f > 1, f
+        # the depth is clamped to what the local tile can host
+        f_small = select_fuse("halo", spec, (8, 8), 16, "cpu", tuned=None,
+                              mesh=(2, 4))
+        assert f_small is not None and f_small * spec.radius <= 2, f_small
+
     def test_select_fuse_prefers_depth_on_tpu_not_on_cpu(self):
         spec = laplace_jacobi(2)
         # memory-bound TPU cell: fusion wins until rim recompute crosses the
