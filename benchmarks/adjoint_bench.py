@@ -1,0 +1,65 @@
+"""Adjoint-solve benchmark: forward vs forward+backward cost (ISSUE 9).
+
+Prices the differentiable solve (``core.adjoint.implicit_solve``): the
+forward fixed point alone, then a full ``jax.value_and_grad`` through it —
+one adjoint solve with the transposed operator plus the pointwise gradient
+assembly.  The interesting number is the backward/forward ratio: the
+implicit-function-theorem VJP costs roughly one extra solve regardless of
+iteration count, where unrolled autodiff would scale with it (and reverse
+through ``lax.while_loop`` is impossible outright).
+
+``run`` returns (csv rows, metrics dict); metric keys are ``adjoint/...``
+and land in BENCH_stencil.json's ``adjoint`` section (schema 6):
+
+  {"grid": [H, W], "iters": int, "backend": str,
+   "fwd_s": float, "grad_s": float, "grad_over_fwd": float}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import heterogeneous_jacobi, implicit_solve
+
+from benchmarks.common import csv_row, time_callable
+
+
+def run(grid=(64, 64), iters: int = 200, backend: str = "conv"):
+    rows = []
+    metrics: dict[str, dict] = {}
+    rng = np.random.default_rng(0)
+    spec = heterogeneous_jacobi(1.0 + 9.0 * rng.random(grid))
+    fields = jnp.asarray(spec.field_stack())
+    src = jnp.asarray(rng.standard_normal(grid), jnp.float32)
+    x0 = jnp.zeros(grid, jnp.float32)
+
+    # Fixed-length solves so forward and backward run identical iteration
+    # counts and the ratio is a pure adjoint-overhead measurement.
+    kw = dict(backend=backend, rtol=None, atol=None, max_iters=iters)
+
+    @jax.jit
+    def fwd(f):
+        return jnp.sum(implicit_solve(spec, x0, fields=f, source=src, **kw))
+
+    grad = jax.jit(jax.value_and_grad(fwd))
+
+    t_fwd = time_callable(fwd, fields)
+    t_grad = time_callable(grad, fields)
+    ratio = t_grad / max(t_fwd, 1e-12)
+
+    name = f"adjoint/hetero-{grid[0]}x{grid[1]}/{backend}"
+    rows.append(csv_row(
+        f"{name}/forward", t_fwd, f"iters={iters} backend={backend}"))
+    rows.append(csv_row(
+        f"{name}/grad", t_grad,
+        f"iters={iters} grad/fwd={ratio:.2f}x (adjoint = ~one extra solve)"))
+    metrics[name] = {
+        "grid": list(grid),
+        "iters": int(iters),
+        "backend": backend,
+        "fwd_s": float(t_fwd),
+        "grad_s": float(t_grad),
+        "grad_over_fwd": float(ratio),
+    }
+    return rows, metrics

@@ -2,9 +2,9 @@
 Prints ``name,us_per_call,derived`` CSV rows and (with ``--json``) writes a
 machine-readable artifact so the perf trajectory is trackable across commits.
 
-JSON schema (stable, version 5):
+JSON schema (stable, version 6):
 
-  {"schema": 5,
+  {"schema": 6,
    "us_per_call": {row name: microseconds per timed call},
    "interpreted_rows": [row names whose timing came from interpret-mode
                         Pallas — structurally tagged so consumers exclude
@@ -33,12 +33,16 @@ JSON schema (stable, version 5):
                               # timed rows (weak/strong/fuse-sweep):
                               "s_per_iter": float, "comm_rounds": int,
                               # the scaling/equivalence row instead:
-                              "max_err": float, "converged": bool}}}
+                              "max_err": float, "converged": bool}},
+   "adjoint":     {row name: {"grid": [H, W], "iters": int, "backend": str,
+                              "fwd_s": float, "grad_s": float,
+                              "grad_over_fwd": float}}}
 
 Sections may return either a list of CSV rows or (rows, metrics dict);
 metric keys starting with ``multigrid/`` land in the ``multigrid`` section,
 ``autotune/`` in ``autotune``, ``scaling/`` in ``scaling`` (the
 forced-8-device distributed rows from benchmarks/scaling_bench.py),
+``adjoint/`` in ``adjoint`` (differentiable-solve forward-vs-grad cost),
 everything else in ``solver``.  Any metric row carrying
 ``"interpreted": true`` also lands its name in the top-level
 ``interpreted_rows`` list.
@@ -63,6 +67,7 @@ _ALIASES = {
     "multigrid_bench": "multigrid",
     "autotune_bench": "autotune",
     "scaling_bench": "scaling",
+    "adjoint_bench": "adjoint",
 }
 
 
@@ -72,14 +77,14 @@ def main() -> int:
                     help="smaller step counts (CI)")
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write the schema-5 JSON artifact "
+                    help="also write the schema-6 JSON artifact "
                          "({schema, us_per_call, interpreted_rows, solver, "
-                         "multigrid, autotune, scaling})")
+                         "multigrid, autotune, scaling, adjoint})")
     args = ap.parse_args()
     only = ({_ALIASES.get(o, o) for o in args.only} if args.only else None)
 
-    from benchmarks import (autotune_bench, fig5_shapes, fig6_3d,
-                            multigrid_bench, roofline, scaling_bench,
+    from benchmarks import (adjoint_bench, autotune_bench, fig5_shapes,
+                            fig6_3d, multigrid_bench, roofline, scaling_bench,
                             stencil_fuse_sweep, table1_2d)
 
     sections = {
@@ -95,6 +100,8 @@ def main() -> int:
             iters=20 if args.fast else 100,
             tune_iters=20, repeats=1 if args.fast else 3),
         "scaling": lambda: scaling_bench.run(smoke=args.fast),
+        "adjoint": lambda: adjoint_bench.run(
+            iters=50 if args.fast else 200),
     }
     failed = 0
     if only:
@@ -108,6 +115,7 @@ def main() -> int:
     mg_metrics: dict[str, dict] = {}
     tune_metrics: dict[str, dict] = {}
     scaling_metrics: dict[str, dict] = {}
+    adjoint_metrics: dict[str, dict] = {}
     interpreted_rows: list[str] = []
     print("name,us_per_call,derived")
     for name, fn in sections.items():
@@ -124,6 +132,8 @@ def main() -> int:
                         tune_metrics[k] = v
                     elif k.startswith("scaling/"):
                         scaling_metrics[k] = v
+                    elif k.startswith("adjoint/"):
+                        adjoint_metrics[k] = v
                     else:
                         solver_metrics[k] = v
                     if isinstance(v, dict) and v.get("interpreted"):
@@ -148,16 +158,18 @@ def main() -> int:
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
     if args.json:
-        payload = {"schema": 5, "us_per_call": results,
+        payload = {"schema": 6, "us_per_call": results,
                    "interpreted_rows": sorted(interpreted_rows),
                    "solver": solver_metrics, "multigrid": mg_metrics,
-                   "autotune": tune_metrics, "scaling": scaling_metrics}
+                   "autotune": tune_metrics, "scaling": scaling_metrics,
+                   "adjoint": adjoint_metrics}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {len(results)} timing rows + {len(solver_metrics)} "
               f"solver rows + {len(mg_metrics)} multigrid rows + "
               f"{len(tune_metrics)} autotune rows + {len(scaling_metrics)} "
-              f"scaling rows to {args.json}", file=sys.stderr)
+              f"scaling rows + {len(adjoint_metrics)} adjoint rows to "
+              f"{args.json}", file=sys.stderr)
     return 1 if failed else 0
 
 

@@ -190,14 +190,15 @@ def run(smoke: bool = False):
 def validate_scaling(data: dict) -> list[str]:
     """Errors in an artifact's ``scaling`` section; [] means valid.
 
-    Accepts either a full BENCH_stencil.json (schema 5) or the mini artifact
-    ``--json`` writes.  Beyond structure, this enforces the acceptance bar:
-    fuse>=2 must record at most half the ppermute rounds of fuse=1, and the
-    converged distributed solve must match the reference to 1e-5.
+    Accepts either a full BENCH_stencil.json (schema 5/6) or the mini
+    artifact ``--json`` writes.  Beyond structure, this enforces the
+    acceptance bar: fuse>=2 must record at most half the ppermute rounds of
+    fuse=1, and the converged distributed solve must match the reference to
+    1e-5.
     """
     errors: list[str] = []
-    if "schema" in data and data["schema"] != 5:
-        errors.append(f"schema {data['schema']!r} != 5")
+    if "schema" in data and data["schema"] not in (5, 6):
+        errors.append(f"schema {data['schema']!r} not in (5, 6)")
     sc = data.get("scaling")
     if not isinstance(sc, dict) or not sc:
         return errors + ["missing or empty 'scaling' section"]

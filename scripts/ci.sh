@@ -13,10 +13,15 @@
 #   scripts/ci.sh --scaling-smoke
 #                              run the forced-8-host-device weak-scaling
 #                              benchmark one row deep and validate the
-#                              schema-5 `scaling` section, then exit
+#                              `scaling` section, then exit
+#   scripts/ci.sh --adjoint-smoke
+#                              run the differentiable-solve gate: the fast
+#                              adjoint gradient tests plus the learned-
+#                              stencil training example (must reach a 10x
+#                              loss reduction with a checkpoint round-trip)
 #
-# Both test tiers refresh BENCH_stencil.json (schema 5: us_per_call +
-# interpreted_rows + solver + multigrid + autotune + scaling metrics) so the
+# Both test tiers refresh BENCH_stencil.json (schema 6: us_per_call +
+# interpreted_rows + solver + multigrid + autotune + scaling + adjoint) so the
 # perf trajectory and the cost-model regression tests in
 # tests/solver/test_cost_model.py stay anchored to this host, and both run
 # the tune-check so a stale/illegal tuned table fails CI.
@@ -39,23 +44,37 @@ scaling_smoke() {
   rm -f "$out"
 }
 
+adjoint_smoke() {
+  echo "== adjoint smoke (gradient checks + learned-stencil training) =="
+  # Transpose algebra + structural gradient properties (the elementwise FD
+  # sweeps stay in the normal test tiers; they dominate the runtime).
+  python -m pytest -x -q tests/solver/test_adjoint.py \
+    -k "Transpose or ForwardAgreement or Structure"
+  python -m pytest -x -q tests/test_solver_layer.py
+  python examples/learned_stencil.py --smoke --steps 80 --assert-decreasing
+}
+
 if [[ "${1:-}" == "--tune-check" ]]; then
   tune_check
   exit 0
 elif [[ "${1:-}" == "--scaling-smoke" ]]; then
   scaling_smoke
   exit 0
+elif [[ "${1:-}" == "--adjoint-smoke" ]]; then
+  adjoint_smoke
+  exit 0
 elif [[ "${1:-}" == "--all" ]]; then
   tune_check
   echo "== full test suite (matrix + solver + distributed tiers) =="
   python -m pytest -x -q
   scaling_smoke
-  echo "== stencil benchmark (table1 + fig6 + multigrid + autotune + scaling) =="
-  python -m benchmarks.run --only table1_2d fig6_3d multigrid autotune scaling --json BENCH_stencil.json
+  adjoint_smoke
+  echo "== stencil benchmark (table1 + fig6 + multigrid + autotune + scaling + adjoint) =="
+  python -m benchmarks.run --only table1_2d fig6_3d multigrid autotune scaling adjoint --json BENCH_stencil.json
 else
   tune_check
   echo "== fast test tier (-m 'not slow') =="
   python -m pytest -x -q -m "not slow"
   echo "== stencil benchmark (fast) =="
-  python -m benchmarks.run --fast --only table1_2d multigrid autotune --json BENCH_stencil.json
+  python -m benchmarks.run --fast --only table1_2d multigrid autotune adjoint --json BENCH_stencil.json
 fi

@@ -20,7 +20,12 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.core.stencil import WeightField
+
 _SEP = "/"
+# Key suffix marking a leaf that was a WeightField (solver-family stencil
+# params); _unflatten re-wraps so restored trees round-trip structurally.
+_WF_MARK = "%wf"
 
 
 def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
@@ -31,6 +36,8 @@ def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}{_SEP}{i}" if prefix else str(i)))
+    elif isinstance(tree, WeightField):
+        out[prefix + _WF_MARK] = np.asarray(jax.device_get(tree.values))
     else:
         out[prefix] = np.asarray(jax.device_get(tree))
     return out
@@ -39,6 +46,9 @@ def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
 def _unflatten(flat: dict[str, np.ndarray]) -> Any:
     tree: dict = {}
     for key, val in flat.items():
+        if key.endswith(_WF_MARK):
+            key = key[: -len(_WF_MARK)]
+            val = WeightField(val)
         parts = key.split(_SEP)
         node = tree
         for p in parts[:-1]:
@@ -102,8 +112,12 @@ class Checkpointer:
             flat = {k: z[k] for k in z.files}
         tree = _unflatten(flat)
         if shardings is not None:
+            # is_leaf keeps WeightFields whole (they are pytree nodes, the
+            # shardings tree has a single sharding at their position);
+            # device_put broadcasts that sharding over the wrapped array.
             tree = jax.tree.map(
-                lambda arr, sh: jax.device_put(arr, sh), tree, shardings)
+                lambda arr, sh: jax.device_put(arr, sh), tree, shardings,
+                is_leaf=lambda x: isinstance(x, WeightField))
         return tree
 
     def restore_latest(self, shardings: Any | None = None) -> tuple[int, Any] | None:

@@ -8,6 +8,7 @@ from repro.configs.base import ModelConfig, get_config, list_archs
 # Import for registration side effects.
 from repro.configs import (  # noqa: F401
     glm4_9b,
+    learned_stencil,
     mamba2_370m,
     moonshot_v1_16b_a3b,
     nemotron_4_15b,

@@ -24,6 +24,12 @@ red-black Gauss-Seidel — ``multigrid_solve`` reaches the same fixed point as
 Variable-coefficient operators (per-cell ``WeightField`` taps, e.g.
 ``heterogeneous_jacobi``) flow through the same spec/backend machinery.
 """
+from repro.core.adjoint import (
+    DIFF_BACKENDS,
+    implicit_solve,
+    transpose_fields,
+    transpose_spec,
+)
 from repro.core.autotune import (
     TunedEntry,
     TunedTable,
@@ -33,7 +39,7 @@ from repro.core.autotune import (
     shape_bucket,
     spec_family,
 )
-from repro.core.boundary import BoundaryMode, DirichletBC
+from repro.core.boundary import BoundaryMode, DirichletBC, runtime_bc_grids
 from repro.core.conv1d import causal_conv1d, causal_conv1d_update
 from repro.core.conv_encoding import (
     conv2d_kernel,
@@ -87,6 +93,7 @@ from repro.core.stencil import (
 __all__ = [
     "BACKENDS",
     "BackendSupport",
+    "DIFF_BACKENDS",
     "BoundaryMode",
     "DirichletBC",
     "MGResult",
@@ -129,10 +136,14 @@ __all__ = [
     "DeliveredPerf",
     "encoding_flops_per_point",
     "heterogeneous_jacobi",
+    "implicit_solve",
     "jacobi_reference",
     "jacobi_step",
     "laplace_jacobi",
     "multigrid_solve",
+    "runtime_bc_grids",
+    "transpose_fields",
+    "transpose_spec",
     "prolongation_spec",
     "red_black_step",
     "restriction_spec",

@@ -1,0 +1,283 @@
+"""Differentiable solves — the adjoint (reverse) solve as a custom VJP.
+
+``Solver`` runs the fixed-point iteration
+
+    x <- M (S_w x + s) + g
+
+(M = interior mask, S_w = the stencil, s = source, g = Dirichlet shell)
+inside a ``lax.while_loop``, which JAX cannot reverse-differentiate — and
+unrolling thousands of iterations for autodiff would cost O(iterations)
+memory anyway.  The implicit function theorem says neither is needed: at a
+*converged* fixed point x*, the VJP of x* against a cotangent x̄ is itself a
+stencil solve with the transposed operator,
+
+    μ = M (S_w^T μ + x̄)          (the adjoint solve)
+    λ = x̄ + S_w^T μ              (one raw transposed application)
+
+after which every input gradient is a cheap pointwise expression:
+
+    w̄_k   = Σ_b μ_b ⊙ shift(x*_b, off_k)     (per-cell weight fields)
+    s̄     = μ   (summed over batch if the source was shared)
+    v̄/ḡ  = λ ⊙ (1 − M)  (boundary value; summed to a scalar if v was)
+    x̄0    = 0   (the fixed point forgets its initialisation)
+
+The adjoint solve reuses the *same* Solver machinery — transposed spec via
+tap reflection, source = x̄, bc = 0 — so the backward pass inherits the
+forward's backend, convergence criteria, and batching, and memory stays O(1)
+in the iteration count (only x* is saved for the backward pass).
+
+Transposition: with (S_w x)[i] = Σ_k w_k[i] · x[i + off_k] (fields indexed
+at the output cell, zero-filled reads — ``reference.apply_stencil``), the
+transpose is ⟨S x, u⟩ = ⟨x, S^T u⟩ with
+
+    (S^T u)[j] = Σ_k w_k[j − off_k] · u[j − off_k],
+
+i.e. each tap reflects to offset −off_k and a per-cell field becomes its own
+shift by −off_k (zero-filled).  Offset negation is a bijection, so the
+transposed spec is again a valid ``StencilSpec``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.boundary import BoundaryMode, DirichletBC
+from repro.core.reference import _shift, apply_stencil
+from repro.core.stencil import StencilSpec, WeightField
+
+# Backends whose plans take the runtime operands the VJP needs (fields /
+# source / bc_value) end-to-end.  The Pallas paths bake the Dirichlet value
+# into the kernel as a static scalar and take no source operand, so they can
+# execute a forward solve but not host the adjoint machinery.
+DIFF_BACKENDS = ("reference", "dense", "conv", "conv3d_native")
+
+
+# ---------------------------------------------------------------------------
+# Spec transposition
+# ---------------------------------------------------------------------------
+
+def _shift_np(a: np.ndarray, off: tuple[int, ...]) -> np.ndarray:
+    """result[i] = a[i + off], zero-filled (numpy twin of reference._shift)."""
+    out = np.zeros_like(a)
+    src, dst = [], []
+    for n, o in zip(a.shape, off):
+        if abs(o) >= n:
+            return out
+        src.append(slice(o, n) if o >= 0 else slice(0, n + o))
+        dst.append(slice(0, n - o) if o >= 0 else slice(-o, n))
+    out[tuple(dst)] = a[tuple(src)]
+    return out
+
+
+def transpose_spec(spec: StencilSpec) -> StencilSpec:
+    """The adjoint operator S^T as a StencilSpec (tap reflection).
+
+    Scalar taps keep their weight at the negated offset; per-cell weight
+    fields are shifted by the negated offset (zero-filled) so the field is
+    again indexed at the *output* cell.  Transposing twice round-trips.
+    """
+    taps = []
+    for off, w in spec.taps:
+        noff = tuple(-o for o in off)
+        if isinstance(w, WeightField):
+            taps.append((noff, WeightField(_shift_np(w.array, noff))))
+        else:
+            taps.append((noff, w))
+    return StencilSpec(taps=tuple(taps), name=f"{spec.name}^T")
+
+
+def transpose_fields(spec: StencilSpec, fields: jnp.ndarray) -> jnp.ndarray:
+    """Map a (V, *grid) runtime field stack of ``spec`` onto the canonical
+    tap order of ``transpose_spec(spec)`` (traced — gradients flow through).
+
+    ``StencilSpec`` sorts its taps canonically, so tap k of the transposed
+    spec is generally *not* the reflection of tap k of ``spec``; this
+    permutes accordingly.
+    """
+    offs = spec.variable_offsets
+    shifted = {tuple(-o for o in off): _shift(fields[k], tuple(-o for o in off))
+               for k, off in enumerate(offs)}
+    t_offs = transpose_spec(spec).variable_offsets
+    return jnp.stack([shifted[tuple(off)] for off in t_offs])
+
+
+# ---------------------------------------------------------------------------
+# Cached solver construction
+# ---------------------------------------------------------------------------
+
+class _Cfg(NamedTuple):
+    """Hashable static settings of one differentiable solve (the
+    nondiff argument of the custom_vjp)."""
+    spec: StencilSpec
+    grid_shape: tuple[int, ...]
+    backend: str
+    rtol: float | None
+    atol: float | None
+    norm: str
+    check_every: int | None
+    max_iters: int
+    interpret: bool | None
+    device_kind: str | None
+
+
+@functools.lru_cache(maxsize=128)
+def _solver_for(cfg: _Cfg, transposed: bool):
+    from repro.core.solver import Solver
+    spec = transpose_spec(cfg.spec) if transposed else cfg.spec
+    mode = (BoundaryMode.MATRIX if cfg.backend == "dense"
+            else BoundaryMode.MASK)
+    return Solver(
+        spec, cfg.grid_shape, backend=cfg.backend, bc=DirichletBC(0.0),
+        mode=mode, rtol=cfg.rtol, atol=cfg.atol, norm=cfg.norm,
+        check_every=cfg.check_every, max_iters=cfg.max_iters,
+        interpret=cfg.interpret, device_kind=cfg.device_kind)
+
+
+# ---------------------------------------------------------------------------
+# The custom-VJP fixed point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _solve_fp(cfg: _Cfg, fields, source, bc_value, x0):
+    x, _, _, _ = _solver_for(cfg, False).run(
+        x0, fields=fields, source=source, bc_value=bc_value)
+    return x
+
+
+def _solve_fp_fwd(cfg, fields, source, bc_value, x0):
+    x = _solve_fp(cfg, fields, source, bc_value, x0)
+    # O(1) residuals: the converged solution and the operands — nothing
+    # proportional to the iteration count.
+    return x, (fields, source, bc_value, x)
+
+
+def _solve_fp_bwd(cfg, res, g):
+    fields, source, bc_value, xstar = res
+    spec = cfg.spec
+    tspec = transpose_spec(spec)
+    tfields = None if fields is None else transpose_fields(spec, fields)
+
+    # μ = M (S^T μ + x̄): the same masked fixed-point iteration with the
+    # transposed spec, source = cotangent, boundary value 0.
+    g = g.astype(xstar.dtype)
+    mu, _, _, _ = _solver_for(cfg, True).run(
+        jnp.zeros_like(xstar), fields=tfields, source=g)
+    # λ = x̄ + S^T μ (one raw transposed application; μ is zero on the shell
+    # so the masked and unmasked S^T μ agree in the interior).
+    lam = g + jax.vmap(lambda m: apply_stencil(m, tspec, tfields))(mu)
+
+    m = np.zeros(cfg.grid_shape, np.float32)
+    m[tuple(slice(1, -1) for _ in cfg.grid_shape)] = 1.0
+    shell = jnp.asarray(1.0 - m, xstar.dtype)
+
+    if fields is None:
+        d_fields = None
+    else:
+        # w̄_k = Σ_b μ_b ⊙ shift(x*_b, off_k), in the *forward* spec's
+        # canonical variable-tap order (the layout of the fields operand).
+        d_fields = jnp.stack([
+            jnp.sum(mu * jax.vmap(lambda t: _shift(t, off))(xstar), axis=0)
+            for off in spec.variable_offsets
+        ]).astype(fields.dtype)
+
+    if source is None:
+        d_source = None
+    else:
+        s = jnp.asarray(source)
+        d_source = mu if s.ndim == xstar.ndim else jnp.sum(mu, axis=0)
+        d_source = d_source.astype(s.dtype)
+
+    lam_shell = lam * shell
+    if jnp.ndim(bc_value) == 0:
+        d_bc = jnp.sum(lam_shell)
+    else:
+        d_bc = jnp.sum(lam_shell, axis=0)
+
+    return d_fields, d_source, d_bc, jnp.zeros_like(xstar)
+
+
+_solve_fp.defvjp(_solve_fp_fwd, _solve_fp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+def implicit_solve(
+    spec: StencilSpec,
+    x0: jnp.ndarray,
+    *,
+    fields: jnp.ndarray | None = None,
+    source: jnp.ndarray | None = None,
+    bc_value=0.0,
+    backend: str = "auto",
+    rtol: float | None = 1e-6,
+    atol: float | None = 0.0,
+    norm: str = "l2",
+    check_every: int | None = None,
+    max_iters: int = 10_000,
+    interpret: bool | None = None,
+    device_kind: str | None = None,
+) -> jnp.ndarray:
+    """Run ``spec``'s fixed point to convergence, differentiably.
+
+    Returns the converged field (same shape as ``x0``: (batch, *grid) or
+    bare).  Unlike :func:`core.solver.solve` this is a *traced, reverse-
+    differentiable* function of its operands — ``jax.grad`` through it
+    triggers one adjoint solve (module docstring) instead of unrolling the
+    while_loop, so gradient memory is O(1) in the iteration count:
+
+      fields    (V, *grid) per-cell weight stack for a variable spec
+                (canonical tap order; ``spec.field_stack()`` for the baked
+                values) — gradient: the weight-field sensitivities;
+      source    additive interior term, (*grid) shared or (batch, *grid);
+      bc_value  Dirichlet value, scalar or full grid;
+      x0        initialisation — gradient is exactly zero (a converged
+                fixed point forgets where it started).
+
+    ``backend`` must take runtime operands (``DIFF_BACKENDS``); "auto"
+    picks conv for 2D/3D, dense for small 1D grids, reference otherwise.
+    ``rtol=None, atol=None`` runs exactly ``max_iters`` iterations (the
+    gradient is exact for the *converged* fixed point, so run to
+    convergence before trusting it).
+    """
+    x0 = jnp.asarray(x0)
+    if x0.ndim not in (spec.ndim, spec.ndim + 1):
+        raise ValueError(
+            f"x0.ndim={x0.ndim} incompatible with a {spec.ndim}D spec "
+            f"(expect grid or batch+grid)")
+    squeeze = x0.ndim == spec.ndim
+    if squeeze:
+        x0 = x0[None]
+    grid_shape = tuple(x0.shape[1:])
+
+    if backend == "auto":
+        if spec.ndim in (2, 3):
+            backend = "conv"
+        elif int(np.prod(grid_shape)) <= 64 * 64:
+            backend = "dense"
+        else:
+            backend = "reference"
+    if backend not in DIFF_BACKENDS:
+        raise ValueError(
+            f"backend {backend!r} cannot host a differentiable solve (its "
+            f"plan lacks runtime operands); pick one of {DIFF_BACKENDS}")
+
+    if fields is not None:
+        fields = jnp.asarray(fields)
+        want = (spec.num_variable_taps, *grid_shape)
+        if tuple(fields.shape) != want:
+            raise ValueError(
+                f"fields operand must be shaped {want}, got "
+                f"{tuple(fields.shape)}")
+
+    cfg = _Cfg(spec=spec, grid_shape=grid_shape, backend=backend,
+               rtol=rtol, atol=atol, norm=norm, check_every=check_every,
+               max_iters=max_iters, interpret=interpret,
+               device_kind=device_kind)
+    x = _solve_fp(cfg, fields, source, bc_value, x0)
+    return x[0] if squeeze else x

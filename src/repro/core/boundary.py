@@ -75,3 +75,27 @@ class DirichletBC:
         mask = self.interior_mask(x.shape, x.dtype)
         bc = self.bc_grid(x.shape, x.dtype)
         return x * mask + bc
+
+
+def runtime_bc_grids(shape: tuple[int, ...], bc_value,
+                     dtype=jnp.float32) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(interior_mask, bc_grid) for a possibly-*traced* Dirichlet value.
+
+    ``DirichletBC`` holds its value as static plan-build-time data; this is
+    the runtime-operand counterpart: ``bc_value`` may be a Python scalar, a
+    traced 0-d array, or a (possibly traced) full-grid array whose shell
+    holds the values.  The returned ``bc_grid`` is a traced function of
+    ``bc_value``, so gradients flow through it (the adjoint solve needs
+    d(solution)/d(boundary value)).
+    """
+    m = np.zeros(shape, dtype=np.float32)
+    m[tuple(slice(1, -1) for _ in shape)] = 1.0
+    mask = jnp.asarray(m, dtype)
+    v = jnp.asarray(bc_value, dtype)
+    if v.ndim not in (0, len(shape)):
+        raise ValueError(
+            f"bc_value must be a scalar or a {len(shape)}D grid, got "
+            f"shape {v.shape}")
+    if v.ndim and v.shape != tuple(shape):
+        raise ValueError(f"bc grid shape {v.shape} != {tuple(shape)}")
+    return mask, v * (1.0 - mask)

@@ -29,8 +29,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.boundary import BoundaryMode, DirichletBC
+from repro.core.boundary import BoundaryMode, DirichletBC, runtime_bc_grids
 from repro.core.stencil import StencilSpec, WeightField
+
+
+def _seed_and_drive(grid, bc, bc_value, source, dtype, x0):
+    """(seeded x, mask, drive) shared by the MASK-trick executors.
+
+    Every mask-trick scan body computes ``y = conv(x) * mask + bc_grid``; a
+    runtime source term and/or traced Dirichlet value fold into the same
+    additive grid — ``drive = bc_grid + mask * source`` — so the jitted
+    bodies need no changes to become differentiable in both operands.
+    ``drive`` carries a leading broadcast axis ((1, *grid) or (B, *grid)
+    for a batched source).
+    """
+    if bc_value is None:
+        mask = bc.interior_mask(grid, dtype)
+        bcg = bc.bc_grid(grid, dtype)
+        x = jax.vmap(bc.set_boundary)(x0.astype(dtype))
+    else:
+        mask, bcg = runtime_bc_grids(grid, bc_value, dtype)
+        x = x0.astype(dtype) * mask + bcg
+    drive = bcg[None]
+    if source is not None:
+        drive = drive + mask * jnp.asarray(source, dtype)
+    return x, mask, drive
 
 
 # ---------------------------------------------------------------------------
@@ -89,19 +112,29 @@ def conv_jacobi_2d(
     iterations: int,
     mode: BoundaryMode = BoundaryMode.MASK,
     dtype=jnp.float32,
+    *,
+    source: jnp.ndarray | None = None,
+    bc_value=None,
 ) -> jnp.ndarray:
-    """Algorithm 2 of the paper.  x0: (batch, H, W) → (batch, H, W)."""
+    """Algorithm 2 of the paper.  x0: (batch, H, W) → (batch, H, W).
+
+    ``source``/``bc_value`` are optional runtime (possibly traced) operands;
+    they fold into the mask-trick drive grid, so they require
+    ``BoundaryMode.MASK``.
+    """
     if mode is BoundaryMode.PAD and spec.radius != 1:
         # With a 1-cell boundary shell, 'valid'+re-pad only reconstructs the
         # zero-padded semantics for radius-1 stencils; use MASK otherwise.
         raise ValueError("BoundaryMode.PAD requires a radius-1 stencil")
-    batch = x0.shape[0]
+    if (source is not None or bc_value is not None) \
+            and mode is not BoundaryMode.MASK:
+        raise ValueError("runtime source/bc_value operands fold into the "
+                         "mask-trick drive grid (BoundaryMode.MASK only)")
     grid = x0.shape[1:]
     kernel = jnp.asarray(conv2d_kernel(spec), dtype=dtype)
-    x = jax.vmap(bc.set_boundary)(x0.astype(dtype))[:, None]  # (B,1,H,W)
-    mask = bc.interior_mask(grid, dtype)[None, None]
-    bcg = bc.bc_grid(grid, dtype)[None, None]
-    out = _conv_jacobi_2d(x, kernel, mask, bcg, iterations, mode)
+    x, mask, drive = _seed_and_drive(grid, bc, bc_value, source, dtype, x0)
+    out = _conv_jacobi_2d(x[:, None], kernel, mask[None, None],
+                          drive[:, None], iterations, mode)
     return out[:, 0]
 
 
@@ -150,6 +183,9 @@ def conv_jacobi_3d_channels(
     bc: DirichletBC,
     iterations: int,
     dtype=jnp.float32,
+    *,
+    source: jnp.ndarray | None = None,
+    bc_value=None,
 ) -> jnp.ndarray:
     """Paper's 3D approach.  x0: (batch, Z, X, Y); Z rides the channel axis.
 
@@ -157,13 +193,10 @@ def conv_jacobi_3d_channels(
     Z faces as boundary too — the mask/bc grids are built on the full 3D
     shape and broadcast as (1, Z, X, Y).
     """
-    batch = x0.shape[0]
     grid = x0.shape[1:]  # (Z, X, Y)
     kernel = jnp.asarray(conv3d_channels_kernel(spec, depth=grid[0]), dtype=dtype)
-    x = jax.vmap(bc.set_boundary)(x0.astype(dtype))  # (B,Z,X,Y): Z = channels
-    mask = bc.interior_mask(grid, dtype)[None]
-    bcg = bc.bc_grid(grid, dtype)[None]
-    return _conv_jacobi_3d_channels(x, kernel, mask, bcg, iterations)
+    x, mask, drive = _seed_and_drive(grid, bc, bc_value, source, dtype, x0)
+    return _conv_jacobi_3d_channels(x, kernel, mask[None], drive, iterations)
 
 
 # ---------------------------------------------------------------------------
@@ -197,14 +230,16 @@ def conv_jacobi_3d_native(
     bc: DirichletBC,
     iterations: int,
     dtype=jnp.float32,
+    *,
+    source: jnp.ndarray | None = None,
+    bc_value=None,
 ) -> jnp.ndarray:
     """Native Conv3D path — the encoding the paper could not use on the CS-1."""
     grid = x0.shape[1:]
     kernel = jnp.asarray(conv3d_kernel(spec), dtype=dtype)
-    x = jax.vmap(bc.set_boundary)(x0.astype(dtype))[:, None]  # (B,1,Z,X,Y)
-    mask = bc.interior_mask(grid, dtype)[None, None]
-    bcg = bc.bc_grid(grid, dtype)[None, None]
-    out = _conv_jacobi_3d_native(x, kernel, mask, bcg, iterations)
+    x, mask, drive = _seed_and_drive(grid, bc, bc_value, source, dtype, x0)
+    out = _conv_jacobi_3d_native(x[:, None], kernel, mask[None, None],
+                                 drive[:, None], iterations)
     return out[:, 0]
 
 
@@ -273,6 +308,10 @@ def conv_var_jacobi(
     bc: DirichletBC,
     iterations: int,
     dtype=jnp.float32,
+    *,
+    fields: jnp.ndarray | None = None,
+    source: jnp.ndarray | None = None,
+    bc_value=None,
 ) -> jnp.ndarray:
     """Variable-coefficient Jacobi via the gather trick (MASK boundary mode).
 
@@ -280,6 +319,10 @@ def conv_var_jacobi(
     channels-trick 3D path cannot express per-cell fields (its band weights
     are shared across the plane), which ``backend_support`` reports as a
     reasoned skip.  x0: (batch, *grid) → (batch, *grid).
+
+    ``fields`` optionally overrides the spec's baked per-cell values with a
+    runtime (V, *grid) stack — the stack was already an operand of the
+    jitted body, so a traced override costs nothing and is differentiable.
     """
     if spec.ndim not in (2, 3):
         raise ValueError("conv gather trick supports 2D and 3D specs")
@@ -288,11 +331,10 @@ def conv_var_jacobi(
         raise ValueError(
             f"spec {spec.name} carries {spec.weights_shape}-shaped weight "
             f"fields but the grid is {grid}")
-    scalar_k, gather_k, fields = split_var_kernels(spec)
-    x = jax.vmap(bc.set_boundary)(x0.astype(dtype))[:, None]
-    mask = bc.interior_mask(grid, dtype)[None, None]
-    bcg = bc.bc_grid(grid, dtype)[None, None]
+    scalar_k, gather_k, baked = split_var_kernels(spec)
+    f = jnp.asarray(baked if fields is None else fields, dtype)
+    x, mask, drive = _seed_and_drive(grid, bc, bc_value, source, dtype, x0)
     out = _conv_var_jacobi(
-        x, jnp.asarray(scalar_k, dtype), jnp.asarray(gather_k, dtype),
-        jnp.asarray(fields, dtype), mask, bcg, iterations, spec.ndim)
+        x[:, None], jnp.asarray(scalar_k, dtype), jnp.asarray(gather_k, dtype),
+        f, mask[None, None], drive[:, None], iterations, spec.ndim)
     return out[:, 0]

@@ -28,7 +28,8 @@ from repro.core.stencil import StencilSpec, WeightField
 
 
 def build_dense_matrix(
-    grid_shape: tuple[int, ...], spec: StencilSpec, dtype=np.float32
+    grid_shape: tuple[int, ...], spec: StencilSpec, dtype=np.float32,
+    include_variable: bool = True,
 ) -> np.ndarray:
     """Materialize the N×N stencil matrix with identity boundary rows.
 
@@ -66,25 +67,73 @@ def build_dense_matrix(
             flat_j = int(np.dot(nbr, strides))
             # column = output, row = input (x @ W); per-cell fields are
             # indexed at the output cell
-            wv = weight.array[idx] if isinstance(weight, WeightField) else weight
+            if isinstance(weight, WeightField):
+                if not include_variable:
+                    continue
+                wv = weight.array[idx]
+            else:
+                wv = weight
             w[flat_j, flat_i] += wv
     return w
 
 
+def var_tap_indices(
+    grid_shape: tuple[int, ...], spec: StencilSpec
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Scatter indices that place runtime per-cell fields into the matrix.
+
+    Returns ``(tap_k, flat_j, flat_i)`` int32 arrays, one entry per
+    (variable tap, interior output cell with in-bounds neighbour) pair, so a
+    traced (V, *grid) field stack becomes matrix updates
+
+        W = W0.at[flat_j, flat_i].add(fields.reshape(V, -1)[tap_k, flat_i])
+
+    where ``W0 = build_dense_matrix(..., include_variable=False)``.  This is
+    how the dense encoding takes weight fields as *operands* (differentiable,
+    no rebuild) instead of baking them in at plan time.
+    """
+    n = int(np.prod(grid_shape))
+    interior = np.zeros(grid_shape, dtype=bool)
+    interior[tuple(slice(1, -1) for _ in grid_shape)] = True
+    strides = np.array([int(np.prod(grid_shape[d + 1:]))
+                        for d in range(len(grid_shape))])
+    var_offsets = [off for off, w in spec.taps if isinstance(w, WeightField)]
+    tap_k, flat_j, flat_i = [], [], []
+    for flat in range(n):
+        idx = np.unravel_index(flat, grid_shape)
+        if not interior[idx]:
+            continue
+        for k, off in enumerate(var_offsets):
+            nbr = np.array(idx) + np.array(off)
+            if np.any(nbr < 0) or np.any(nbr >= np.array(grid_shape)):
+                continue
+            tap_k.append(k)
+            flat_j.append(int(np.dot(nbr, strides)))
+            flat_i.append(flat)
+    return (np.asarray(tap_k, np.int32), np.asarray(flat_j, np.int32),
+            np.asarray(flat_i, np.int32))
+
+
 @functools.partial(jax.jit, static_argnames=("iterations",))
 def dense_jacobi(
-    x0: jnp.ndarray, matrix: jnp.ndarray, iterations: int
+    x0: jnp.ndarray, matrix: jnp.ndarray, iterations: int,
+    drive: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Algorithm 1: flatten, then ``iterations`` dense-layer applications.
 
     ``x0`` has shape (batch, *grid_shape).  The matmul accumulates in fp32
-    (mixed precision, as on the CS-1).
+    (mixed precision, as on the CS-1).  ``drive`` is an optional flattened
+    additive term per iteration ((n,) or (batch, n), zero on the boundary
+    shell so the identity rows keep pinning the Dirichlet values) — the
+    fixed-point form of an inhomogeneous problem, ``x <- x W + c``.
     """
     batch = x0.shape[0]
     grid_shape = x0.shape[1:]
     x = x0.reshape(batch, -1)
     def body(x, _):
         y = jnp.matmul(x, matrix, preferred_element_type=jnp.float32)
+        if drive is not None:
+            y = y + drive
         return y.astype(x0.dtype), None
     x, _ = jax.lax.scan(body, x, None, length=iterations)
     return x.reshape(batch, *grid_shape)

@@ -30,9 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.boundary import BoundaryMode, DirichletBC
+from repro.core.boundary import BoundaryMode, DirichletBC, runtime_bc_grids
 from repro.core.metrics import encoding_flops_per_point
-from repro.core.reference import apply_stencil, jacobi_step
+from repro.core.reference import apply_stencil
 from repro.core.stencil import StencilSpec
 
 BACKENDS = (
@@ -139,10 +139,6 @@ def backend_support(
         return _OK  # variable taps ride the gather trick (one-hot channels)
 
     if backend in ("pallas", "pallas_fused"):
-        if backend == "pallas_fused" and variable:
-            return _no("temporal fusion would need halo-replicated per-cell "
-                       "weight fields; variable-coefficient specs run the "
-                       "direct pallas kernel instead")
         if backend == "pallas_fused" and nd != 2:
             return _no("temporal fusion kernel is 2D only (jacobi_fused.py)")
         if nd not in (2, 3):
@@ -443,6 +439,20 @@ class StencilPlan:
     ``make_plan`` does the one-time work (backend choice, dense-matrix
     materialization, distributed-solver tracing) so repeated calls — the
     benchmark loops — pay only the jitted execution.
+
+    Beyond the input field, a plan may accept *runtime operands* — traced
+    arrays that change per call without recompiling, the mechanism the
+    differentiable/adjoint path is built on:
+
+      fields    (V, *grid) per-cell weight stack overriding the spec's baked
+                values (canonical tap order, ``StencilSpec.field_stack``);
+      source    additive interior term per iteration ((*grid) or
+                (batch, *grid)) — the fixed-point form ``x <- M (S x + s) + g``;
+      bc_value  Dirichlet value (scalar or full grid), possibly traced.
+
+    ``operands`` names what this backend/mode combination supports; passing
+    an unsupported operand raises at call time (Python level, not trace
+    time).
     """
 
     spec: StencilSpec
@@ -452,7 +462,7 @@ class StencilPlan:
     iters: int
     fuse: int
     costs: dict[str, float]
-    _fn: Callable[[jnp.ndarray], jnp.ndarray]
+    _fn: Callable[..., jnp.ndarray]
     # Whether the Pallas kernels behind this plan actually run interpreted
     # (False for every non-Pallas backend) — benchmarks and the autotuner
     # use this to tag rows structurally instead of trusting name suffixes.
@@ -461,15 +471,30 @@ class StencilPlan:
     # "tuned" (measured-table hit), or "roofline" (analytic fallback).
     source: str = "explicit"
     rim: str | None = None
+    operands: frozenset = frozenset()
 
-    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+    def __call__(self, x: jnp.ndarray, *, fields=None, source=None,
+                 bc_value=None) -> jnp.ndarray:
+        for name, val in (("fields", fields), ("source", source),
+                          ("bc_value", bc_value)):
+            if val is not None and name not in self.operands:
+                sup = ", ".join(sorted(self.operands)) or "none"
+                raise ValueError(
+                    f"this {self.backend!r} plan takes no runtime {name} "
+                    f"operand (supported here: {sup})")
+        if fields is not None:
+            want = (self.spec.num_variable_taps, *self.grid_shape)
+            if tuple(fields.shape) != want:
+                raise ValueError(
+                    f"fields operand must be shaped {want} (tap-major stack "
+                    f"over the variable taps), got {tuple(fields.shape)}")
         squeeze = x.ndim == self.spec.ndim
         if squeeze:
             x = x[None]
         if x.shape[1:] != self.grid_shape:
             raise ValueError(
                 f"plan built for grid {self.grid_shape}, got {x.shape[1:]}")
-        out = self._fn(x)
+        out = self._fn(x, fields, source, bc_value)
         return out[0] if squeeze else out
 
 
@@ -487,27 +512,43 @@ def _scalar_bc_value(bc: DirichletBC | None) -> float | None:
     return float(bc.value)
 
 
-def _raw_reference(x, spec, iters):
+def _raw_reference(x, spec, iters, fields=None):
     def one(g):
         def body(t, _):
-            return apply_stencil(t, spec), None
+            return apply_stencil(t, spec, fields), None
         y, _ = jax.lax.scan(body, g, None, length=iters)
         return y
     return jax.vmap(one)(x)
 
 
-def _bc_reference(x, spec, bc, iters):
+def _bc_reference(x, spec, bc, iters, fields=None, source=None,
+                  bc_value=None, dtype=jnp.float32):
     # Same math as jacobi_reference, but the iteration loop is a lax.scan:
     # the oracle's unrolled Python loop is fine for the conformance matrix's
     # 2 iterations, but XLA compile time explodes super-linearly once the
-    # solver asks for O(100)-iteration chunks.
-    def one(g):
-        g = bc.set_boundary(g)
+    # solver asks for O(100)-iteration chunks.  Runtime operands ride the
+    # mask-trick form directly: x <- mask * (S x + source) + bc_grid.
+    grid = x.shape[1:]
+    if bc_value is None:
+        mask = bc.interior_mask(grid, dtype)
+        bcg = bc.bc_grid(grid, dtype)
+    else:
+        mask, bcg = runtime_bc_grids(grid, bc_value, dtype)
+
+    def one(g, s):
+        g = g * mask + bcg
         def body(t, _):
-            return jacobi_step(t, spec, bc), None
+            y = apply_stencil(t, spec, fields)
+            if s is not None:
+                y = y + s
+            return y * mask + bcg, None
         y, _ = jax.lax.scan(body, g, None, length=iters)
         return y
-    return jax.vmap(one)(x)
+
+    if source is None:
+        return jax.vmap(lambda g: one(g, None))(x)
+    src = jnp.broadcast_to(jnp.asarray(source, dtype), x.shape)
+    return jax.vmap(one)(x, src)
 
 
 def make_plan(
@@ -592,9 +633,8 @@ def make_plan(
         elif iters % fuse:
             raise ValueError(f"iters={iters} not divisible by fuse={fuse}")
     else:
-        fusing = (backend == "pallas_fused" or (backend == "pallas"
-                                                and spec.ndim == 2)) \
-            and not spec.is_variable
+        fusing = backend == "pallas_fused" or (backend == "pallas"
+                                               and spec.ndim == 2)
         if not fusing:
             fuse = 1
             rim = None
@@ -612,93 +652,148 @@ def make_plan(
     interpreted = backend in ("pallas", "pallas_fused") \
         and default_interpret(interpret)
 
-    fn = _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype,
-                   mesh, interpret, block_h, rim)
+    fn, operands = _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse,
+                             dtype, mesh, interpret, block_h, rim)
     # One jit over the whole closure: the per-call preamble (conv-kernel
     # build, set_boundary, mask/bc grids, halo sharding constraint) traces
     # into constants, so repeated plan calls pay only compiled execution.
+    # Runtime operands (fields/source/bc_value) are traced arguments; a None
+    # operand is a structure change, so each used combination compiles once.
     fn = jax.jit(fn)
     return StencilPlan(spec=spec, backend=backend, grid_shape=grid_shape,
                        mode=mode, iters=iters, fuse=fuse, costs=costs, _fn=fn,
-                       interpreted=interpreted, source=source, rim=rim)
+                       interpreted=interpreted, source=source, rim=rim,
+                       operands=operands)
 
 
 def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
               interpret, block_h=None, rim=None):
-    """One closure per backend; all share (batch, *grid) -> same semantics."""
+    """One closure per backend; all share (batch, *grid) -> same semantics.
+
+    Returns ``(fn, operands)``: ``fn(x, fields, source, bc_value)`` and the
+    frozenset of runtime-operand names this cell supports (see StencilPlan).
+    """
     # Imports deferred so importing repro.core never drags in the Pallas /
     # shard_map machinery for users who only want the specs.
+    var_ops = frozenset(("fields",)) if spec.is_variable else frozenset()
+
     if backend == "reference":
         if bc is None:
-            return lambda x: _raw_reference(x.astype(dtype), spec, iters)
-        return lambda x: _bc_reference(x.astype(dtype), spec, bc, iters)
+            return (lambda x, fields, source, bc_value:
+                    _raw_reference(x.astype(dtype), spec, iters, fields),
+                    var_ops)
+        return (lambda x, fields, source, bc_value:
+                _bc_reference(x.astype(dtype), spec, bc, iters, fields,
+                              source, bc_value, dtype),
+                var_ops | {"source", "bc_value"})
 
     if backend == "dense":
-        from repro.core.dense_encoding import build_dense_matrix, dense_jacobi
+        from repro.core.dense_encoding import (build_dense_matrix,
+                                               dense_jacobi, var_tap_indices)
         matrix = jnp.asarray(build_dense_matrix(grid_shape, spec), dtype)
+        if spec.is_variable:
+            matrix0 = jnp.asarray(
+                build_dense_matrix(grid_shape, spec, include_variable=False),
+                dtype)
+            tap_k, flat_j, flat_i = var_tap_indices(grid_shape, spec)
+        nvar = spec.num_variable_taps
 
-        def run_dense(x):
-            x = jax.vmap(bc.set_boundary)(x.astype(dtype))
-            return dense_jacobi(x, matrix, iters)
-        return run_dense
+        def run_dense(x, fields, source, bc_value):
+            x = x.astype(dtype)
+            if bc_value is None:
+                x = jax.vmap(bc.set_boundary)(x)
+                mask = bc.interior_mask(grid_shape, dtype)
+            else:
+                mask, bcg = runtime_bc_grids(grid_shape, bc_value, dtype)
+                x = x * mask + bcg
+            m = matrix
+            if fields is not None:
+                vals = jnp.asarray(fields, dtype).reshape(nvar, -1)
+                m = matrix0.at[flat_j, flat_i].add(vals[tap_k, flat_i])
+            drive = None
+            if source is not None:
+                s = jnp.broadcast_to(jnp.asarray(source, dtype), x.shape)
+                drive = (s * mask).reshape(x.shape[0], -1)
+            return dense_jacobi(x, m, iters, drive)
+        return run_dense, var_ops | {"source", "bc_value"}
 
     if backend == "conv":
         from repro.core.conv_encoding import (conv_jacobi_2d,
                                               conv_jacobi_3d_channels,
                                               conv_var_jacobi)
         if spec.is_variable:
-            return lambda x: conv_var_jacobi(x, spec, bc, iters, dtype=dtype)
+            return (lambda x, fields, source, bc_value:
+                    conv_var_jacobi(x, spec, bc, iters, dtype=dtype,
+                                    fields=fields, source=source,
+                                    bc_value=bc_value),
+                    frozenset(("fields", "source", "bc_value")))
         if spec.ndim == 2:
-            return lambda x: conv_jacobi_2d(x, spec, bc, iters, mode,
-                                            dtype=dtype)
-        return lambda x: conv_jacobi_3d_channels(x, spec, bc, iters,
-                                                 dtype=dtype)
+            ops = frozenset(("source", "bc_value")) \
+                if mode is BoundaryMode.MASK else frozenset()
+            return (lambda x, fields, source, bc_value:
+                    conv_jacobi_2d(x, spec, bc, iters, mode, dtype=dtype,
+                                   source=source, bc_value=bc_value), ops)
+        return (lambda x, fields, source, bc_value:
+                conv_jacobi_3d_channels(x, spec, bc, iters, dtype=dtype,
+                                        source=source, bc_value=bc_value),
+                frozenset(("source", "bc_value")))
 
     if backend == "conv3d_native":
         from repro.core.conv_encoding import (conv_jacobi_3d_native,
                                               conv_var_jacobi)
         if spec.is_variable:
-            return lambda x: conv_var_jacobi(x, spec, bc, iters, dtype=dtype)
-        return lambda x: conv_jacobi_3d_native(x, spec, bc, iters, dtype=dtype)
+            return (lambda x, fields, source, bc_value:
+                    conv_var_jacobi(x, spec, bc, iters, dtype=dtype,
+                                    fields=fields, source=source,
+                                    bc_value=bc_value),
+                    frozenset(("fields", "source", "bc_value")))
+        return (lambda x, fields, source, bc_value:
+                conv_jacobi_3d_native(x, spec, bc, iters, dtype=dtype,
+                                      source=source, bc_value=bc_value),
+                frozenset(("source", "bc_value")))
 
     if backend in ("pallas", "pallas_fused"):
-        bc_value = _scalar_bc_value(bc)
+        bc_value_s = _scalar_bc_value(bc)
         rim = rim or "trapezoid"
         kw2d = {"block_h": block_h} if block_h else {}
         if spec.ndim == 3:
             from repro.kernels import jacobi3d, stencil3d
             kw3d = {"block_x": block_h} if block_h else {}
-            if bc_value is not None:
-                return lambda x: jacobi3d(x.astype(dtype), spec,
-                                          bc_value=bc_value, iterations=iters,
-                                          interpret=interpret, **kw3d)
+            if bc_value_s is not None:
+                return (lambda x, fields, source, bc_value:
+                        jacobi3d(x.astype(dtype), spec, bc_value=bc_value_s,
+                                 iterations=iters, interpret=interpret,
+                                 **kw3d),
+                        frozenset())
 
-            def run_raw3d(x):
+            def run_raw3d(x, fields, source, bc_value):
                 def body(t, _):
                     return stencil3d(t, spec, interpret=interpret,
                                      **kw3d), None
                 y, _ = jax.lax.scan(body, x.astype(dtype), None, length=iters)
                 return y
-            return run_raw3d
+            return run_raw3d, frozenset()
 
-        if bc_value is not None:
+        if bc_value_s is not None:
             from repro.kernels import jacobi2d
-            return lambda x: jacobi2d(x.astype(dtype), spec, bc_value=bc_value,
-                                      iterations=iters, fuse=fuse,
-                                      interpret=interpret, rim=rim, **kw2d)
+            return (lambda x, fields, source, bc_value:
+                    jacobi2d(x.astype(dtype), spec, bc_value=bc_value_s,
+                             iterations=iters, fuse=fuse, interpret=interpret,
+                             rim=rim, fields=fields, **kw2d),
+                    var_ops)
         if spec.is_variable:
             from repro.kernels import stencil2d
 
-            def run_raw2d_var(x):
+            def run_raw2d_var(x, fields, source, bc_value):
                 def body(t, _):
                     return stencil2d(t, spec, interpret=interpret,
-                                     **kw2d), None
+                                     fields=fields, **kw2d), None
                 y, _ = jax.lax.scan(body, x.astype(dtype), None, length=iters)
                 return y
-            return run_raw2d_var
+            return run_raw2d_var, var_ops
         from repro.kernels import jacobi2d_fused_step
 
-        def run_raw2d(x):
+        def run_raw2d(x, fields, source, bc_value):
             def body(t, _):
                 return jacobi2d_fused_step(t, spec, fuse=fuse,
                                            interpret=interpret, rim=rim,
@@ -706,18 +801,19 @@ def _build_fn(spec, grid_shape, backend, bc, mode, iters, fuse, dtype, mesh,
             y, _ = jax.lax.scan(body, x.astype(dtype), None,
                                 length=iters // fuse)
             return y
-        return run_raw2d
+        return run_raw2d, frozenset()
 
     if backend == "halo":
         from repro.core.distributed import make_halo_runner
-        bc_value = _scalar_bc_value(bc)
+        bc_value_s = _scalar_bc_value(bc)
         if mesh is None:
             mesh = jax.make_mesh((1, 1), ("halo_row", "halo_col"))
         row_axis, col_axis = mesh.axis_names[0], mesh.axis_names[1]
         run = make_halo_runner(
-            mesh, spec, H=grid_shape[0], W=grid_shape[1], bc_value=bc_value,
+            mesh, spec, H=grid_shape[0], W=grid_shape[1], bc_value=bc_value_s,
             iterations=iters, row_axis=row_axis, col_axis=col_axis, fuse=fuse)
-        return lambda x: run(x.astype(dtype))
+        return (lambda x, fields, source, bc_value: run(x.astype(dtype)),
+                frozenset())
 
     raise AssertionError(backend)
 

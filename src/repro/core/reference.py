@@ -32,31 +32,50 @@ def _shift(x: jnp.ndarray, offset: tuple[int, ...]) -> jnp.ndarray:
     return x
 
 
-def apply_stencil(x: jnp.ndarray, spec: StencilSpec) -> jnp.ndarray:
+def apply_stencil(x: jnp.ndarray, spec: StencilSpec,
+                  fields: jnp.ndarray | None = None) -> jnp.ndarray:
     """One raw stencil application with zero (implicit) padding outside.
 
     Scalar taps contribute ``w * shift(x, off)``; per-cell weight fields
     contribute ``w[i] * x[i + off]`` (the field is indexed at the *output*
     cell) — this is the oracle the variable-coefficient conformance cells
     cross-check every encoding against.
+
+    ``fields`` optionally overrides the spec's per-cell values: a (V, *grid)
+    stack in canonical tap order (see ``StencilSpec.field_stack``).  It may
+    be traced, which makes this the differentiable executor for the adjoint.
     """
     if spec.is_variable and spec.weights_shape != x.shape:
         raise ValueError(
             f"spec {spec.name} carries {spec.weights_shape}-shaped weight "
             f"fields but the grid is {x.shape}")
     acc = jnp.zeros_like(x)
+    k = 0
     for off, w in spec.taps:
         if isinstance(w, WeightField):
-            wt = jnp.asarray(w.array, x.dtype)
+            if fields is not None:
+                wt = jnp.asarray(fields[k], x.dtype)
+            else:
+                wt = jnp.asarray(w.values, x.dtype)
+            k += 1
         else:
             wt = jnp.asarray(w, x.dtype)
         acc = acc + wt * _shift(x, off)
     return acc
 
 
-def jacobi_step(x: jnp.ndarray, spec: StencilSpec, bc: DirichletBC) -> jnp.ndarray:
-    """One Jacobi iteration with Dirichlet BCs: interior updated, shell held."""
-    out = apply_stencil(x, spec)
+def jacobi_step(x: jnp.ndarray, spec: StencilSpec, bc: DirichletBC,
+                fields: jnp.ndarray | None = None,
+                source: jnp.ndarray | None = None) -> jnp.ndarray:
+    """One Jacobi iteration with Dirichlet BCs: interior updated, shell held.
+
+    With a ``source`` term the interior update becomes ``S x + s`` (the
+    fixed-point form of an inhomogeneous problem); the shell stays pinned to
+    the Dirichlet value either way.
+    """
+    out = apply_stencil(x, spec, fields)
+    if source is not None:
+        out = out + source
     return bc.apply_mask_trick(out)
 
 

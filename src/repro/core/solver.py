@@ -113,7 +113,7 @@ def select_fuse(backend: str, spec: StencilSpec, grid_shape: tuple[int, ...],
     """
     halo = backend == "halo" and spec.ndim == 2
     if not halo and (backend not in ("pallas", "pallas_fused")
-                     or spec.ndim != 2 or spec.is_variable):
+                     or spec.ndim != 2):
         return None
     if device_kind is None:
         device_kind = jax.default_backend()
@@ -295,7 +295,7 @@ class Solver:
                 return jnp.max(jnp.abs(v), axis=axes)
             return jnp.sqrt(jnp.sum(v * v, axis=axes))
 
-        def loop(x0):
+        def loop(x0, fields=None, source=None, bc_value=None):
             axes = tuple(range(1, x0.ndim))
             b = x0.shape[0]
             state = (
@@ -313,7 +313,7 @@ class Solver:
 
             def body(s):
                 k, x, active, res, iters, hist = s
-                y = plan(x)
+                y = plan(x, fields=fields, source=source, bc_value=bc_value)
                 err = grid_norm(y - x, axes)
                 done = err <= atol + rtol * grid_norm(y, axes)
                 keep = active.reshape(active.shape + (1,) * (x.ndim - 1))
@@ -330,7 +330,40 @@ class Solver:
 
     # -- public API --------------------------------------------------------
 
-    def solve(self, x0: jnp.ndarray) -> SolveResult:
+    def run(self, x0: jnp.ndarray, *, fields=None, source=None,
+            bc_value=None):
+        """Trace-safe solve: ``(x, iterations, converged, residual)`` arrays.
+
+        The differentiable / jittable core of :meth:`solve` — no host sync,
+        no numpy conversion, no timing.  Operands beyond ``x0`` are runtime
+        plan operands (per-cell weight ``fields``, additive ``source``,
+        Dirichlet ``bc_value``) and may be traced; a plan that does not take
+        an operand rejects a non-None value (see ``StencilPlan.operands``).
+        The adjoint machinery (``core/adjoint.py``) builds on this.
+        """
+        x0 = jnp.asarray(x0, self.dtype)
+        squeeze = x0.ndim == self.spec.ndim
+        if squeeze:
+            x0 = x0[None]
+        if x0.shape[1:] != self.grid_shape:
+            raise ValueError(
+                f"solver built for grid {self.grid_shape}, got {x0.shape[1:]}")
+        b = x0.shape[0]
+        if self.fixed:
+            x = self.plan(x0, fields=fields, source=source, bc_value=bc_value)
+            iters = jnp.full((b,), self.max_iters, jnp.int32)
+            converged = jnp.zeros((b,), bool)
+            res = jnp.full((b,), jnp.nan, jnp.float32)
+        else:
+            _, x, active, res, iters, _ = self._loop(
+                x0, fields, source, bc_value)
+            converged = ~active
+        if squeeze:
+            return x[0], iters[0], converged[0], res[0]
+        return x, iters, converged, res
+
+    def solve(self, x0: jnp.ndarray, *, fields=None, source=None,
+              bc_value=None) -> SolveResult:
         """Run the time loop from ``x0`` ((batch, *grid) or bare (*grid))."""
         x0 = jnp.asarray(x0, self.dtype)
         squeeze = x0.ndim == self.spec.ndim
@@ -343,7 +376,7 @@ class Solver:
 
         t0 = time.perf_counter()
         if self.fixed:
-            x = self.plan(x0)
+            x = self.plan(x0, fields=fields, source=source, bc_value=bc_value)
             jax.block_until_ready(x)
             wall = time.perf_counter() - t0
             iterations = np.full((b,), self.max_iters, np.int64)
@@ -351,7 +384,8 @@ class Solver:
             residual = np.full((b,), np.nan, np.float32)
             history = np.empty((0, b), np.float32)
         else:
-            k, x, active, res, iters, hist = self._loop(x0)
+            k, x, active, res, iters, hist = self._loop(
+                x0, fields, source, bc_value)
             jax.block_until_ready(x)
             wall = time.perf_counter() - t0
             iterations = np.asarray(iters, np.int64)
@@ -400,13 +434,18 @@ def solve(
     interpret: bool | None = None,
     device_kind: str | None = None,
     tuned="default",
+    fields=None,
+    source=None,
+    bc_value=None,
 ) -> SolveResult:
     """One-shot iterative solve: run ``spec``'s time loop from ``x0``.
 
     ``x0`` is (batch, *grid) or bare (*grid); see :class:`Solver` for the
     convergence criterion and :class:`SolveResult` for what comes back.
     Build a :class:`Solver` directly to amortize compilation over repeated
-    solves.
+    solves.  ``fields`` / ``source`` / ``bc_value`` are runtime plan
+    operands (per-cell weights, additive source term, Dirichlet value); for
+    a *differentiable* solve use ``core.adjoint.implicit_solve``.
     """
     x0 = jnp.asarray(x0)
     if x0.ndim not in (spec.ndim, spec.ndim + 1):
@@ -420,4 +459,4 @@ def solve(
         atol=atol, norm=norm, check_every=check_every, max_iters=max_iters,
         fuse=fuse, dtype=dtype, mesh=mesh, interpret=interpret,
         device_kind=device_kind, tuned=tuned)
-    return solver.solve(x0)
+    return solver.solve(x0, fields=fields, source=source, bc_value=bc_value)

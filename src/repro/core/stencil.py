@@ -19,54 +19,127 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Sequence
 
+import jax
 import numpy as np
 
 Offset = tuple[int, ...]
 
 
+def _is_concrete(values) -> bool:
+    """True when ``values`` holds actual numbers (not a jax tracer)."""
+    return isinstance(values, np.ndarray) or not isinstance(
+        values, jax.core.Tracer)
+
+
 class WeightField:
-    """A per-cell weight array wrapped to stay hashable (jit-static safe).
+    """A per-cell weight array: hashable when concrete, traceable as a pytree.
 
     ``StencilSpec`` instances are used as dict keys and static jit arguments,
-    so raw ndarrays cannot live in ``taps`` directly.  The wrapper freezes the
-    array (read-only, float32) and hashes its bytes once; equality compares
-    the actual values, so two specs built from equal fields still coincide.
+    so concrete fields freeze their array (read-only, float32) and hash its
+    bytes lazily; equality compares the actual values, so two specs built
+    from equal fields still coincide.
+
+    ``WeightField`` is also a registered JAX pytree (the value array is the
+    single leaf), so fields can live inside parameter trees, be traced
+    through ``jax.jit``/``jax.grad``, and flow into plans as runtime operands
+    (see ``StencilPlan.__call__(fields=...)``).  A traced field is not
+    hashable — the static spec keeps concrete template values and the traced
+    values travel beside it as operands, so weight updates never recompile.
     """
 
-    __slots__ = ("array", "_hash")
+    __slots__ = ("_values", "_np", "_hash")
 
     def __init__(self, array):
-        arr = np.asarray(array, dtype=np.float32)
-        if arr.ndim == 0:
+        if isinstance(array, WeightField):
+            array = array.values
+        if getattr(array, "ndim", None) is None or isinstance(
+                array, (list, tuple)):
+            array = np.asarray(array, dtype=np.float32)
+        if array.ndim == 0:
             raise ValueError("WeightField needs an array, not a scalar "
                              "(pass plain floats for constant taps)")
-        arr = arr.copy()
-        arr.setflags(write=False)
-        object.__setattr__(self, "array", arr)
-        object.__setattr__(self, "_hash",
-                           hash((arr.shape, arr.tobytes())))
+        np_arr = None
+        if isinstance(array, np.ndarray):
+            np_arr = np.asarray(array, dtype=np.float32).copy()
+            np_arr.setflags(write=False)
+            array = np_arr
+        object.__setattr__(self, "_values", array)
+        object.__setattr__(self, "_np", np_arr)
+        object.__setattr__(self, "_hash", None)
 
     def __setattr__(self, name, value):
         raise AttributeError("WeightField is immutable")
 
     @property
+    def values(self):
+        """The raw value array — np.ndarray, jax array, or tracer."""
+        return self._values
+
+    @property
+    def array(self) -> np.ndarray:
+        """Read-only float32 ndarray view (for plan-build-time consumers)."""
+        np_arr = self._np
+        if np_arr is None:
+            if not _is_concrete(self._values):
+                raise TypeError(
+                    "WeightField holds traced values — concrete arrays are "
+                    "only available outside jit/grad traces; pass traced "
+                    "fields as runtime operands instead")
+            np_arr = np.asarray(self._values, dtype=np.float32)
+            np_arr.setflags(write=False)
+            object.__setattr__(self, "_np", np_arr)
+        return np_arr
+
+    @property
     def shape(self) -> tuple[int, ...]:
-        return self.array.shape
+        return tuple(self._values.shape)
 
     @property
     def ndim(self) -> int:
-        return self.array.ndim
+        return self._values.ndim
 
     def __hash__(self):
-        return self._hash
+        h = self._hash
+        if h is None:
+            if not _is_concrete(self._values):
+                raise TypeError(
+                    "a traced WeightField is not hashable — specs carrying "
+                    "traced fields cannot be jit-static; keep the template "
+                    "spec concrete and pass values via the fields operand")
+            arr = self.array
+            h = hash((arr.shape, arr.tobytes()))
+            object.__setattr__(self, "_hash", h)
+        return h
 
     def __eq__(self, other):
-        return (isinstance(other, WeightField)
-                and self.array.shape == other.array.shape
+        if not isinstance(other, WeightField):
+            return NotImplemented
+        if self is other:
+            return True
+        if not (_is_concrete(self._values) and _is_concrete(other._values)):
+            return False
+        return (self.shape == other.shape
                 and np.array_equal(self.array, other.array))
 
     def __repr__(self):
-        return f"WeightField(shape={self.array.shape})"
+        kind = "traced" if not _is_concrete(self._values) else "concrete"
+        return f"WeightField(shape={self.shape}, {kind})"
+
+
+def _wf_flatten(wf: WeightField):
+    return (wf.values,), None
+
+
+def _wf_unflatten(aux, children):
+    del aux
+    wf = object.__new__(WeightField)
+    object.__setattr__(wf, "_values", children[0])
+    object.__setattr__(wf, "_np", None)
+    object.__setattr__(wf, "_hash", None)
+    return wf
+
+
+jax.tree_util.register_pytree_node(WeightField, _wf_flatten, _wf_unflatten)
 
 
 def _canon_weight(off: Offset, w) -> "float | WeightField":
@@ -210,6 +283,48 @@ class StencilSpec:
             idx = tuple(o - l for o, l in zip(off, lo))
             ker[idx] = w
         return ker
+
+    @property
+    def variable_offsets(self) -> tuple[Offset, ...]:
+        """Offsets of the per-cell taps, in canonical tap order."""
+        return tuple(o for o, w in self.taps if isinstance(w, WeightField))
+
+    def field_values(self) -> tuple:
+        """Raw value arrays of the per-cell taps, in canonical tap order."""
+        return tuple(w.values for _, w in self.taps if isinstance(w, WeightField))
+
+    def field_stack(self):
+        """The per-cell taps stacked tap-major: shape (V, *grid); None if none.
+
+        This is the runtime-operand layout every backend streams — pass an
+        array of this shape as ``fields=`` to a plan / solver to override the
+        spec's baked values (e.g. with traced parameters during training).
+        """
+        vals = self.field_values()
+        if not vals:
+            return None
+        if all(isinstance(v, np.ndarray) for v in vals):
+            return np.stack(vals)
+        import jax.numpy as jnp
+        return jnp.stack([jnp.asarray(v) for v in vals])
+
+    def with_field_values(self, values, name: str | None = None) -> "StencilSpec":
+        """A spec whose per-cell taps take their values from ``values``.
+
+        ``values`` is a (V, *grid) stack or a sequence of V grid-shaped
+        arrays, matched to the variable taps in canonical tap order.  Values
+        may be traced (jax arrays inside jit/grad) — the resulting spec is
+        then *not* hashable and must not be used as a jit-static argument;
+        it exists for trace-time consumers like ``apply_stencil``.
+        """
+        offs = self.variable_offsets
+        if len(values) != len(offs):
+            raise ValueError(
+                f"{self.name}: got {len(values)} field value arrays for "
+                f"{len(offs)} variable taps")
+        repl = {off: WeightField(v) for off, v in zip(offs, values)}
+        taps = tuple((o, repl.get(o, w)) for o, w in self.taps)
+        return StencilSpec(taps=taps, name=name or self.name)
 
 
 def laplace_jacobi(ndim: int) -> StencilSpec:

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.stencil import StencilSpec
+from repro.core.stencil import StencilSpec, WeightField
 from repro.kernels.tiling import (
     default_interpret,
     fused_block_geometry,
@@ -49,8 +49,9 @@ from repro.kernels.tiling import (
 )
 
 
-def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, T: int,
+def _kernel(x_ref, *refs, spec: StencilSpec, r: int, T: int,
             block_h: int, H: int, W: int, bc_value: float | None):
+    w_ref, o_ref = (refs[0], refs[1]) if len(refs) == 2 else (None, refs[0])
     i = pl.program_id(1)
     xb = x_ref[0].astype(jnp.float32)  # (block_h + 2Tr, Wp + 2Tr)
     halo = T * r
@@ -73,8 +74,22 @@ def _kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, T: int,
 
     for t in range(T):
         acc = None
+        # After this iteration the valid window shrinks by r per side: the
+        # output spans rows [row0 + r, ...], i.e. offset (t+1)*r into the
+        # halo-replicated per-cell weight block (which is aligned with the
+        # *initial* xb).  Garbage field reads only land on out-of-array
+        # output cells, which the in_array mask below zeroes.
+        ah, aw = xb.shape[0] - 2 * r, xb.shape[1] - 2 * r
+        o0 = (t + 1) * r
+        k = 0
         for off, wgt in spec.taps:
-            term = shift2d(xb, off[0], off[1], r) * np.float32(wgt)
+            term = shift2d(xb, off[0], off[1], r)
+            if isinstance(wgt, WeightField):
+                term = term * w_ref[k, o0:o0 + ah, o0:o0 + aw].astype(
+                    jnp.float32)
+                k += 1
+            else:
+                term = term * np.float32(wgt)
             acc = term if acc is None else acc + term
         row0 += r
         col0 += r
@@ -99,12 +114,14 @@ def _shift2d_zfill(xb: jnp.ndarray, dr: int, dc: int, r: int) -> jnp.ndarray:
     return jax.lax.slice(xp, (r + dr, r + dc), (r + dr + h, r + dc + w))
 
 
-def _resident_kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, T: int,
+def _resident_kernel(x_ref, *refs, spec: StencilSpec, r: int, T: int,
                      H: int, W: int, bc_value: float | None):
     """T iterations with the whole grid in VMEM; the rim is *refreshed*
     (out-of-grid zeroed, shell re-pinned) every iteration instead of being
     carried in a T·r-deep halo, so no work is redundant and T is unbounded.
+    Per-cell weight fields (if any) are output-aligned full-grid blocks.
     """
+    w_ref, o_ref = (refs[0], refs[1]) if len(refs) == 2 else (None, refs[0])
     xb = x_ref[0].astype(jnp.float32)  # (Hp, Wp) — the entire padded grid
     rows = jax.lax.broadcasted_iota(jnp.int32, xb.shape, 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, xb.shape, 1)
@@ -118,8 +135,14 @@ def _resident_kernel(x_ref, o_ref, *, spec: StencilSpec, r: int, T: int,
 
     for _ in range(T):
         acc = None
+        k = 0
         for off, wgt in spec.taps:
-            term = _shift2d_zfill(xb, off[0], off[1], r) * np.float32(wgt)
+            term = _shift2d_zfill(xb, off[0], off[1], r)
+            if isinstance(wgt, WeightField):
+                term = term * w_ref[k].astype(jnp.float32)
+                k += 1
+            else:
+                term = term * np.float32(wgt)
             acc = term if acc is None else acc + term
         acc = jnp.where(in_array, acc, 0.0)
         if bc_value is not None:
@@ -143,6 +166,7 @@ def jacobi2d_fused_step(
     bc_value: float | None = None,
     interpret: bool | None = None,
     rim: str = "trapezoid",
+    fields: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """``fuse`` Jacobi iterations in one kernel pass.  x: (batch, H, W).
 
@@ -150,19 +174,28 @@ def jacobi2d_fused_step(
     with bc_value=None computes ``fuse`` raw zero-padded stencil steps.
     ``rim`` selects the fusion geometry (see module docstring); the
     "resident" strategy requires the grid to fit one VMEM block.
+
+    Variable-coefficient specs stream their per-cell weight fields as an
+    extra operand: trapezoid blocks carry the same T·r halo replication as
+    x (iteration t reads the fields at static offset (t+1)·r), the resident
+    strategy reads the full output-aligned grid.  ``fields`` optionally
+    overrides the spec's baked values with a runtime (V, H, W) stack.
     """
     if spec.ndim != 2:
         raise ValueError("jacobi2d_fused_step needs a 2D spec")
-    if spec.is_variable:
-        raise ValueError(
-            "temporal fusion would need halo-replicated per-cell weight "
-            "fields; variable-coefficient specs run the direct stencil2d "
-            "kernel instead")
     interpret = default_interpret(interpret)
     B, H, W = x.shape
     r = spec.radius
     bh, Hp, Wp, halo = fused_block_geometry(H, W, fuse, r, block_h, rim)
     xp = jnp.pad(x, ((0, 0), (0, Hp - H), (0, Wp - W)))
+
+    wf = None
+    if spec.is_variable:
+        if fields is None:
+            fields = np.stack([w.array for _, w in spec.taps
+                               if isinstance(w, WeightField)])
+        wf = jnp.asarray(fields, jnp.float32)
+        wf = jnp.pad(wf, ((0, 0), (0, Hp - H), (0, Wp - W)))
 
     if rim == "resident":
         if not resident_fits((H, W), np.dtype(np.float32).itemsize):
@@ -173,31 +206,50 @@ def jacobi2d_fused_step(
             _resident_kernel, spec=spec, r=r, T=fuse, H=H, W=W,
             bc_value=bc_value,
         )
+        in_specs = [pl.BlockSpec((1, Hp, Wp), lambda b: (b, 0, 0))]
+        operands = [xp]
+        if wf is not None:
+            in_specs.append(
+                pl.BlockSpec((wf.shape[0], Hp, Wp), lambda b: (0, 0, 0)))
+            operands.append(wf)
         out = pl.pallas_call(
             kern,
             grid=(B,),
-            in_specs=[pl.BlockSpec((1, Hp, Wp), lambda b: (b, 0, 0))],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, Hp, Wp), lambda b: (b, 0, 0)),
             out_shape=jax.ShapeDtypeStruct((B, Hp, Wp), x.dtype),
             interpret=interpret,
-        )(xp)
+        )(*operands)
         return out[:, :H, :W]
 
     kern = functools.partial(
         _kernel, spec=spec, r=r, T=fuse, block_h=bh, H=H, W=W, bc_value=bc_value
     )
+    in_specs = [
+        halo_block_spec(
+            (1, bh + 2 * halo, Wp + 2 * halo),
+            lambda b, i: (b, i * bh, 0),
+            ((0, 0), (halo, halo), (halo, halo)),
+        )
+    ]
+    operands = [xp]
+    if wf is not None:
+        # Same halo-replicated geometry as x, shared across the batch axis:
+        # in-kernel iteration t slices the fields at offset (t+1)*r.
+        in_specs.append(
+            halo_block_spec(
+                (wf.shape[0], bh + 2 * halo, Wp + 2 * halo),
+                lambda b, i: (0, i * bh, 0),
+                ((0, 0), (halo, halo), (halo, halo)),
+            )
+        )
+        operands.append(wf)
     out = pl.pallas_call(
         kern,
         grid=(B, Hp // bh),
-        in_specs=[
-            halo_block_spec(
-                (1, bh + 2 * halo, Wp + 2 * halo),
-                lambda b, i: (b, i * bh, 0),
-                ((0, 0), (halo, halo), (halo, halo)),
-            )
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bh, Wp), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hp, Wp), x.dtype),
         interpret=interpret,
-    )(xp)
+    )(*operands)
     return out[:, :H, :W]

@@ -37,6 +37,7 @@ def jacobi2d(
     block_h: int = 256,
     interpret: bool | None = None,
     rim: str = "trapezoid",
+    fields: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """``iterations`` Jacobi steps on (batch, H, W) via the Pallas kernels.
 
@@ -44,26 +45,26 @@ def jacobi2d(
     pipeline); fuse=T applies temporal blocking (beyond-paper, §Perf) with
     ``rim`` selecting the fusion geometry (see jacobi_fused.py).
     ``iterations`` must be divisible by ``fuse``.  Variable-coefficient
-    specs cannot temporally fuse (the fields would need halo replication);
-    they scan the direct ``stencil2d`` kernel one iteration per pass.
+    specs scan the direct ``stencil2d`` kernel at fuse=1 and the fused
+    kernel (halo-replicated per-cell weight blocks) at fuse>1; ``fields``
+    optionally overrides the spec's baked per-cell values with a runtime
+    (V, H, W) stack (a traced operand — no recompile on value changes).
     """
     if iterations % fuse:
         raise ValueError(f"iterations={iterations} not divisible by fuse={fuse}")
-    if spec.is_variable and fuse != 1:
-        raise ValueError("variable-coefficient specs require fuse=1")
     bc = DirichletBC(bc_value)
     x = jax.vmap(bc.set_boundary)(x0)
 
-    if spec.is_variable:
+    if spec.is_variable and fuse == 1:
         def body(x, _):
             y = stencil2d(x, spec, block_h=block_h, bc_value=bc_value,
-                          interpret=interpret)
+                          interpret=interpret, fields=fields)
             return y, None
     else:
         def body(x, _):
             y = jacobi2d_fused_step(
                 x, spec, fuse=fuse, block_h=block_h, bc_value=bc_value,
-                interpret=interpret, rim=rim,
+                interpret=interpret, rim=rim, fields=fields,
             )
             return y, None
 

@@ -78,12 +78,16 @@ def stencil2d(
     block_h: int = 256,
     bc_value: float | None = None,
     interpret: bool | None = None,
+    fields: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Apply one stencil step to x: (batch, H, W).
 
     bc_value=None → raw stencil with zero padding (matches stencil2d_ref);
     bc_value=v    → fused Jacobi step with scalar Dirichlet BC v
                     (matches one iteration of jacobi2d_ref).
+    ``fields`` optionally overrides a variable spec's baked per-cell weight
+    values with a runtime (V, H, W) stack — a traced operand, so value
+    changes don't recompile and gradients flow through it.
     """
     if spec.ndim != 2:
         raise ValueError("stencil2d needs a 2D spec")
@@ -110,8 +114,9 @@ def stencil2d(
         # Per-cell weight fields stream as a second operand, tiled over the
         # same row blocks as the *output* (no halo — fields index the output
         # cell) and shared across the batch grid axis.
-        fields = np.stack([w.array for _, w in spec.taps
-                           if isinstance(w, WeightField)])
+        if fields is None:
+            fields = np.stack([w.array for _, w in spec.taps
+                               if isinstance(w, WeightField)])
         wf = jnp.asarray(fields, jnp.float32)
         wf = jnp.pad(wf, ((0, 0), (0, Hp - H), (0, Wp - W)))
         in_specs.append(

@@ -19,7 +19,8 @@ import numpy as np
 class ParamDef:
     shape: tuple[int, ...]
     dims: tuple[str | None, ...]
-    scale: float | str = "fan_in"   # float -> normal(scale); "fan_in"; "zero"; "one"
+    scale: float | str = "fan_in"   # float -> normal(scale); "fan_in"; "zero";
+                                    # "one"; "const:<v>" -> full(v)
     dtype: Any = None               # None -> model dtype
 
     def init(self, key, dtype):
@@ -28,6 +29,10 @@ class ParamDef:
             return jnp.zeros(self.shape, dt)
         if self.scale == "one":
             return jnp.ones(self.shape, dt)
+        if isinstance(self.scale, str) and self.scale.startswith("const:"):
+            # Deterministic constant init — solver-layer stencil weights
+            # start at a known-stable operator, not at random noise.
+            return jnp.full(self.shape, float(self.scale[6:]), dt)
         if self.scale == "fan_in":
             s = 1.0 / math.sqrt(max(1, self.shape[0]))
         else:

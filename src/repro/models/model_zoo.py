@@ -31,6 +31,11 @@ class ModelApi:
 
 
 def build(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "solver":
+        # Learned-stencil layer: forward = a differentiable fixed-point
+        # solve; params = the stencil weights (see models/solver_layer.py).
+        from repro.models.solver_layer import build_solver_api
+        return build_solver_api(cfg)
     if cfg.family == "encdec":
         table = _encdec.encdec_table(cfg)
 

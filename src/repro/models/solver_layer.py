@@ -1,0 +1,164 @@
+"""Learned-stencil solver layer: the differentiable solve as a model family.
+
+The bridge between the stencil core and the training stack (ISSUE 9
+tentpole, layer 3): a ``ModelApi``-shaped wrapper whose "forward pass" runs
+``core.adjoint.implicit_solve`` to convergence and whose parameters are the
+stencil itself — a (V, *grid) stack of per-cell tap weights plus a scalar
+Dirichlet boundary value.  Gradients flow through the converged fixed point
+via the adjoint solve (O(1) memory in the iteration count), so the layer
+trains under the *same* ``make_train_step`` / AdamW / Sharder / Checkpointer
+machinery as the LM architectures.
+
+The batch contract is ``{"source": (B, *grid), "target": (B, *grid)}`` —
+learn the operator (e.g. a heterogeneous-diffusion kappa field) whose
+steady states match observed solutions.  The loss is plain MSE against the
+target steady state; ``train_step.make_train_step`` auto-dispatches to
+:func:`solver_loss_fn` when ``api.cfg.family == "solver"``.
+
+A solver layer computes in float32 regardless of the session compute dtype:
+fixed-point convergence thresholds are meaningless in bf16, and the whole
+parameter tree is a few grids, not a transformer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adjoint import DIFF_BACKENDS, implicit_solve
+from repro.core.stencil import StencilSpec, heterogeneous_jacobi
+from repro.models.layers import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverLayerConfig:
+    """Duck-typed stand-in for ``ModelConfig`` (family="solver").
+
+    Carries only what the training stack actually reads off ``api.cfg``
+    (arch / family / sharding_profile / source) plus the solve settings.
+    """
+
+    arch: str = "learned-stencil"
+    family: str = "solver"
+    grid: tuple[int, ...] = (32, 32)
+    backend: str = "conv"              # must be in DIFF_BACKENDS
+    rtol: float | None = 1e-5
+    atol: float | None = 0.0
+    max_iters: int = 500
+    check_every: int | None = None
+    init_weight: float = 0.25          # uniform-diffusion start (2D: 4 × 0.25)
+    sharding_profile: str = "tp"
+    source: str = "ISSUE 9: adjoint solve as a trainable layer"
+
+    def __post_init__(self):
+        if self.backend not in DIFF_BACKENDS:
+            raise ValueError(
+                f"solver layer needs a differentiable backend "
+                f"{DIFF_BACKENDS}, got {self.backend!r}")
+        if len(self.grid) < 1:
+            raise ValueError("solver layer needs a non-empty grid shape")
+
+    @property
+    def is_causal_lm(self) -> bool:
+        return False
+
+
+def template_spec(cfg: SolverLayerConfig) -> StencilSpec:
+    """The static spec the solve traces through.
+
+    A uniform heterogeneous-Jacobi spec: every face tap is a per-cell
+    ``WeightField``, so the plan streams all V taps as one runtime operand
+    and the baked values are never read once ``fields=`` is passed.
+    """
+    return heterogeneous_jacobi(np.ones(cfg.grid), name="learned-stencil")
+
+
+def _grid_dims(cfg: SolverLayerConfig) -> tuple[str, ...]:
+    # Row dim shards over data (the only grid dim with a rule); the rest
+    # replicate.  Names match _TP_RULES additions in parallel/sharding.py.
+    names = ("grid_row", "grid_col", "grid_depth")
+    return names[: len(cfg.grid)]
+
+
+def solver_table(cfg: SolverLayerConfig) -> dict:
+    spec = template_spec(cfg)
+    V = spec.num_variable_taps
+    return {
+        "taps": ParamDef(
+            (V, *cfg.grid),
+            ("taps", *_grid_dims(cfg)),
+            scale=f"const:{cfg.init_weight}",
+            dtype=jnp.float32,
+        ),
+        "bc": ParamDef((), (), scale="zero", dtype=jnp.float32),
+    }
+
+
+def solver_forward(cfg: SolverLayerConfig, params, batch, sharder=None):
+    """(B, *grid) source -> converged steady state, differentiably.
+
+    ``params["taps"]`` rides into the solve as the runtime fields operand;
+    ``params["bc"]`` as the Dirichlet value.  The solve starts from zeros —
+    the fixed point forgets x0 anyway (its gradient is exactly zero), so
+    there is nothing to learn about the initialisation.
+    """
+    spec = template_spec(cfg)
+    source = jnp.asarray(batch["source"], jnp.float32)
+    taps = params["taps"].astype(jnp.float32)
+    bc = params["bc"].astype(jnp.float32)
+    if sharder is not None:
+        source = sharder.constrain(source, ("batch", *_grid_dims(cfg)))
+    x0 = jnp.zeros_like(source)
+    sol = implicit_solve(
+        spec, x0, fields=taps, source=source, bc_value=bc,
+        backend=cfg.backend, rtol=cfg.rtol, atol=cfg.atol,
+        check_every=cfg.check_every, max_iters=cfg.max_iters)
+    return sol, jnp.zeros((), jnp.float32)
+
+
+def solver_loss_fn(api, params_f32, batch, sharder=None,
+                   compute_dtype=jnp.float32):
+    """MSE against the target steady state (the solver-family loss).
+
+    Signature-compatible with ``train_step.loss_fn``; ``compute_dtype`` is
+    accepted but the solve always runs float32 (see module docstring).
+    """
+    del compute_dtype
+    pred, aux = api.forward(params_f32, batch, sharder=sharder)
+    err = pred - jnp.asarray(batch["target"], jnp.float32)
+    mse = jnp.mean(jnp.square(err))
+    return mse, {"mse": mse, "aux": aux}
+
+
+def _unsupported(what: str):
+    def fn(*a, **k):
+        raise NotImplementedError(
+            f"solver layers have no {what} — they map source fields to "
+            f"steady states, not token streams")
+    return fn
+
+
+def build_solver_api(cfg: SolverLayerConfig):
+    """ModelApi for the solver family (called from ``model_zoo.build``)."""
+    from repro.models.layers import init_params, param_dims, param_shapes
+    from repro.models.model_zoo import ModelApi
+
+    table = solver_table(cfg)
+
+    def forward(params, batch, sharder=None):
+        return solver_forward(cfg, params, batch, sharder=sharder)
+
+    return ModelApi(
+        cfg=cfg,
+        table=table,
+        init=lambda key, dtype=jnp.float32: init_params(table, key, dtype),
+        shapes=lambda dtype=jnp.float32: param_shapes(table, dtype),
+        dims=lambda: param_dims(table),
+        forward=forward,
+        prefill=_unsupported("prefill"),
+        decode_step=_unsupported("decode step"),
+        cache_shapes=lambda *a, **k: {},
+        cache_dims=lambda: {},
+    )

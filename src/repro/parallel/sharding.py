@@ -52,6 +52,13 @@ _TP_RULES: dict[str, tuple[str, ...]] = {
     "enc_seq": (),
     "patches": (),
     "stage": ("pod",),          # pipeline stages ride the pod axis if used
+    # Solver-family (learned-stencil) params: the tap dim is tiny (2*ndim),
+    # so it replicates; grid rows may shard over data, columns/depth stay
+    # local so each shard holds contiguous stencil rows.
+    "taps": (),
+    "grid_row": ("data",),
+    "grid_col": (),
+    "grid_depth": (),
 }
 
 _SP_RULES: dict[str, tuple[str, ...]] = dict(

@@ -36,14 +36,25 @@ def loss_fn(api: ModelApi, params_f32, batch, sharder: Sharder | None,
 
 
 def make_train_step(api: ModelApi, sharder: Sharder | None,
-                    opt: AdamWConfig, compute_dtype=jnp.bfloat16):
+                    opt: AdamWConfig, compute_dtype=jnp.bfloat16,
+                    loss=None):
+    """``loss`` defaults per family: solver layers get the steady-state MSE
+    (they compute in f32 — convergence thresholds are meaningless in bf16),
+    everything else the chunked LM cross-entropy above."""
+    if loss is None:
+        if getattr(api.cfg, "family", None) == "solver":
+            from repro.models.solver_layer import solver_loss_fn
+            loss = solver_loss_fn
+        else:
+            loss = loss_fn
+
     def train_step(state, batch):
-        (loss, parts), grads = jax.value_and_grad(
-            lambda p: loss_fn(api, p, batch, sharder, compute_dtype),
+        (loss_val, parts), grads = jax.value_and_grad(
+            lambda p: loss(api, p, batch, sharder, compute_dtype),
             has_aux=True,
         )(state["params"])
         new_state, opt_metrics = apply_update(state, grads, opt)
-        metrics = {"loss": loss, **parts, **opt_metrics}
+        metrics = {"loss": loss_val, **parts, **opt_metrics}
         return new_state, metrics
 
     return train_step

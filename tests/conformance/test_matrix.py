@@ -202,11 +202,19 @@ class TestDispatcherContract:
 class TestVariableCoefficientSupport:
     """The variable-coefficient cells that cannot run must say why."""
 
-    def test_pallas_fused_reports_reasoned_skip(self):
+    def test_pallas_fused_variable_coefficients_are_live(self):
+        # Earlier the fused kernel rejected var specs (the fields would have
+        # needed halo replication); they now stream as a halo-replicated
+        # operand sliced per in-kernel iteration, so the cell is live — and
+        # must match the oracle at a fuse depth > 1.
         spec = SPECS["varcoef/2d"]
         sup = backend_support("pallas_fused", spec, grid_shape=GRIDS[2],
                               bc=BC_VALUE)
-        assert not sup and "fusion" in sup.reason
+        assert sup.ok, sup.reason
+        x = jnp.asarray(RNG.standard_normal((2, *GRIDS[2])), jnp.float32)
+        out = stencil_apply(spec, x, backend="pallas_fused", bc=BC_VALUE,
+                            iters=ITERS, fuse=ITERS)
+        np.testing.assert_allclose(out, _oracle(spec, x), atol=2e-5)
 
     def test_halo_variable_coefficients_are_live(self):
         # PR 3 left this cell as a reasoned skip; the fields now shard with

@@ -208,6 +208,61 @@ class TestVariableCoefficientValidation:
                           backend="reference", bc=0.0)
 
 
+class TestWeightFieldPytree:
+    """WeightField as a registered pytree: the property that lets fields
+    live inside parameter trees and trace through jit/grad (ISSUE 9)."""
+
+    FIELD = np.arange(15, dtype=np.float32).reshape(3, 5) + 1.0
+
+    def test_flatten_unflatten_round_trips(self):
+        import jax
+        wf = WeightField(self.FIELD)
+        leaves, treedef = jax.tree.flatten(wf)
+        assert len(leaves) == 1
+        back = jax.tree.unflatten(treedef, leaves)
+        assert isinstance(back, WeightField)
+        np.testing.assert_array_equal(back.array, wf.array)
+        assert back == wf and hash(back) == hash(wf)
+
+    def test_traced_field_refuses_hash_and_array(self):
+        import jax
+        import jax.numpy as jnp
+
+        seen = {}
+
+        @jax.jit
+        def f(wf):
+            with pytest.raises(TypeError, match="not hashable"):
+                hash(wf)
+            with pytest.raises(TypeError, match="traced"):
+                _ = wf.array
+            seen["ok"] = True
+            return wf.values * 2.0
+
+        out = f(WeightField(self.FIELD))
+        assert seen["ok"]
+        np.testing.assert_array_equal(np.asarray(out), self.FIELD * 2.0)
+
+    def test_grad_flows_through_weight_field_leaf(self):
+        import jax
+        import jax.numpy as jnp
+
+        def loss(wf):
+            return jnp.sum(wf.values ** 2)
+
+        g = jax.grad(loss)(WeightField(self.FIELD))
+        assert isinstance(g, WeightField)
+        np.testing.assert_allclose(np.asarray(g.values), 2.0 * self.FIELD)
+
+    def test_tree_map_preserves_wrapper(self):
+        import jax
+        tree = {"a": WeightField(self.FIELD), "b": np.float32(3.0)}
+        doubled = jax.tree.map(lambda x: x * 2, tree)
+        assert isinstance(doubled["a"], WeightField)
+        np.testing.assert_array_equal(np.asarray(doubled["a"].values),
+                                      self.FIELD * 2)
+
+
 class TestHypothesisSweep:
     """Same invariants, hypothesis-driven (skips when not installed)."""
 
