@@ -2,9 +2,9 @@
 Prints ``name,us_per_call,derived`` CSV rows and (with ``--json``) writes a
 machine-readable artifact so the perf trajectory is trackable across commits.
 
-JSON schema (stable, version 6):
+JSON schema (stable, version 7):
 
-  {"schema": 6,
+  {"schema": 7,
    "us_per_call": {row name: microseconds per timed call},
    "interpreted_rows": [row names whose timing came from interpret-mode
                         Pallas — structurally tagged so consumers exclude
@@ -36,16 +36,23 @@ JSON schema (stable, version 6):
                               "max_err": float, "converged": bool}},
    "adjoint":     {row name: {"grid": [H, W], "iters": int, "backend": str,
                               "fwd_s": float, "grad_s": float,
-                              "grad_over_fwd": float}}}
+                              "grad_over_fwd": float}},
+   "serving":     {row name: {"requests": int, "solves_per_sec": float,
+                              "p50_ms": float, "p99_ms": float, ...} and
+                   the serving/*/speedup + serving/*/cache summary rows —
+                   see benchmarks/serving_bench.py}}
 
 Sections may return either a list of CSV rows or (rows, metrics dict);
 metric keys starting with ``multigrid/`` land in the ``multigrid`` section,
 ``autotune/`` in ``autotune``, ``scaling/`` in ``scaling`` (the
 forced-8-device distributed rows from benchmarks/scaling_bench.py),
 ``adjoint/`` in ``adjoint`` (differentiable-solve forward-vs-grad cost),
+``serving/`` in ``serving`` (plan-cache + coalescing engine throughput),
 everything else in ``solver``.  Any metric row carrying
 ``"interpreted": true`` also lands its name in the top-level
-``interpreted_rows`` list.
+``interpreted_rows`` list.  A section whose run produced no metric rows is
+omitted from the payload entirely — an empty ``{}`` section is invalid
+(``serving_bench.validate_serving`` rejects it).
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only table1_2d ...]
                                           [--json BENCH_stencil.json]
@@ -68,6 +75,7 @@ _ALIASES = {
     "autotune_bench": "autotune",
     "scaling_bench": "scaling",
     "adjoint_bench": "adjoint",
+    "serving_bench": "serving",
 }
 
 
@@ -77,15 +85,15 @@ def main() -> int:
                     help="smaller step counts (CI)")
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write the schema-6 JSON artifact "
+                    help="also write the schema-7 JSON artifact "
                          "({schema, us_per_call, interpreted_rows, solver, "
-                         "multigrid, autotune, scaling, adjoint})")
+                         "multigrid, autotune, scaling, adjoint, serving})")
     args = ap.parse_args()
     only = ({_ALIASES.get(o, o) for o in args.only} if args.only else None)
 
     from benchmarks import (adjoint_bench, autotune_bench, fig5_shapes,
                             fig6_3d, multigrid_bench, roofline, scaling_bench,
-                            stencil_fuse_sweep, table1_2d)
+                            serving_bench, stencil_fuse_sweep, table1_2d)
 
     sections = {
         "table1": lambda: table1_2d.run(steps=4 if args.fast else 8,
@@ -102,6 +110,7 @@ def main() -> int:
         "scaling": lambda: scaling_bench.run(smoke=args.fast),
         "adjoint": lambda: adjoint_bench.run(
             iters=50 if args.fast else 200),
+        "serving": lambda: serving_bench.run(smoke=args.fast),
     }
     failed = 0
     if only:
@@ -116,6 +125,7 @@ def main() -> int:
     tune_metrics: dict[str, dict] = {}
     scaling_metrics: dict[str, dict] = {}
     adjoint_metrics: dict[str, dict] = {}
+    serving_metrics: dict[str, dict] = {}
     interpreted_rows: list[str] = []
     print("name,us_per_call,derived")
     for name, fn in sections.items():
@@ -134,6 +144,8 @@ def main() -> int:
                         scaling_metrics[k] = v
                     elif k.startswith("adjoint/"):
                         adjoint_metrics[k] = v
+                    elif k.startswith("serving/"):
+                        serving_metrics[k] = v
                     else:
                         solver_metrics[k] = v
                     if isinstance(v, dict) and v.get("interpreted"):
@@ -158,17 +170,26 @@ def main() -> int:
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
     if args.json:
-        payload = {"schema": 6, "us_per_call": results,
-                   "interpreted_rows": sorted(interpreted_rows),
-                   "solver": solver_metrics, "multigrid": mg_metrics,
-                   "autotune": tune_metrics, "scaling": scaling_metrics,
-                   "adjoint": adjoint_metrics}
+        payload = {"schema": 7, "us_per_call": results,
+                   "interpreted_rows": sorted(interpreted_rows)}
+        # A section that ran produces rows; one that was skipped (--only) or
+        # errored would otherwise land as {} — omit it, empty-dict sections
+        # fail validation (serving_bench.validate_serving).
+        for key, metrics in (("solver", solver_metrics),
+                             ("multigrid", mg_metrics),
+                             ("autotune", tune_metrics),
+                             ("scaling", scaling_metrics),
+                             ("adjoint", adjoint_metrics),
+                             ("serving", serving_metrics)):
+            if metrics:
+                payload[key] = metrics
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {len(results)} timing rows + {len(solver_metrics)} "
               f"solver rows + {len(mg_metrics)} multigrid rows + "
               f"{len(tune_metrics)} autotune rows + {len(scaling_metrics)} "
-              f"scaling rows + {len(adjoint_metrics)} adjoint rows to "
+              f"scaling rows + {len(adjoint_metrics)} adjoint rows + "
+              f"{len(serving_metrics)} serving rows to "
               f"{args.json}", file=sys.stderr)
     return 1 if failed else 0
 

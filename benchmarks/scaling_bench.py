@@ -197,8 +197,8 @@ def validate_scaling(data: dict) -> list[str]:
     1e-5.
     """
     errors: list[str] = []
-    if "schema" in data and data["schema"] not in (5, 6):
-        errors.append(f"schema {data['schema']!r} not in (5, 6)")
+    if "schema" in data and data["schema"] not in (5, 6, 7):
+        errors.append(f"schema {data['schema']!r} not in (5, 6, 7)")
     sc = data.get("scaling")
     if not isinstance(sc, dict) or not sc:
         return errors + ["missing or empty 'scaling' section"]

@@ -1,0 +1,293 @@
+"""Serving benchmark: solves/sec and latency through the plan cache + engine.
+
+The serving tier's claim is that the compiled solver loop is the expensive
+artifact and everything else should amortize it.  This benchmark measures
+that on the Table-1 convergence workload (2D Laplace Jacobi, 64x64 grid,
+bc=1.0, rtol=1e-6, check_every=20 — the paper's run-to-convergence case)
+with per-request random initial fields and small per-request source terms,
+three ways:
+
+  cold-serial      one fresh one-shot ``solve()`` per request — every
+                   request pays plan building + jit compilation (the
+                   pre-serving baseline);
+  warm-serial      sequential requests through a primed ``PlanCache`` —
+                   compilation amortized, no batching;
+  warm-coalesced   concurrent requests through ``ServingEngine`` — one
+                   batched dispatch serves the whole group, per-instance
+                   convergence freezing keeps results exact.
+
+plus a pad-to-bucket row: a 60x60 request served by the warm 64x64-bucket
+entry with no new compilation.
+
+Rows land in BENCH_stencil.json's schema-7 ``serving`` section (keys
+``serving/...``) with solves/sec, p50/p99 latency at the fixed residual
+target, cache hit-rate, and a ``speedup`` row recording the acceptance bar:
+warm-coalesced throughput >= 5x cold-serial.
+
+  PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] [--json PATH]
+  PYTHONPATH=src python -m benchmarks.serving_bench --validate PATH
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+
+GRID = (64, 64)
+NEAR_MISS_GRID = (60, 60)
+BC = 1.0
+RTOL = 1e-6
+CHECK_EVERY = 20
+MAX_ITERS = 20_000
+SPEEDUP_TARGET = 5.0
+
+
+def _problems(n: int, grid, seed: int = 0):
+    """n (x0, source) pairs: random interior, shell at BC, small sources."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        x0 = rng.standard_normal(grid).astype(np.float32)
+        for d in range(len(grid)):
+            idx = [slice(None)] * len(grid)
+            for edge in (0, -1):
+                idx[d] = edge
+                x0[tuple(idx)] = BC
+        src = (rng.standard_normal(grid) * 1e-3).astype(np.float32)
+        out.append((x0, src))
+    return out
+
+
+def _percentiles(latencies: list[float]) -> tuple[float, float]:
+    ls = sorted(latencies)
+    p50 = ls[len(ls) // 2]
+    p99 = ls[min(len(ls) - 1, int(np.ceil(0.99 * len(ls))) - 1)]
+    return p50, p99
+
+
+def _row(name: str, latencies: list[float], wall: float, **extra) -> dict:
+    p50, p99 = _percentiles(latencies)
+    return {"requests": len(latencies),
+            "solves_per_sec": len(latencies) / wall,
+            "p50_ms": p50 * 1e3, "p99_ms": p99 * 1e3,
+            "grid": list(GRID), "rtol": RTOL, **extra}
+
+
+def _cold_serial(problems) -> dict:
+    from repro.core.solver import solve
+    from repro.core.stencil import laplace_jacobi
+    lat = []
+    iters = []
+    for x0, src in problems:
+        # a fresh Solver per request: plan build + compile every time
+        t0 = time.perf_counter()
+        res = solve(laplace_jacobi(2), x0, bc=BC, rtol=RTOL,
+                    check_every=CHECK_EVERY, max_iters=MAX_ITERS, source=src)
+        lat.append(time.perf_counter() - t0)
+        iters.append(res.iterations)
+        assert res.converged
+    return _row("cold-serial", lat, sum(lat), cached=False, coalesced=False,
+                iters_mean=float(np.mean(iters)))
+
+
+def _warm_serial(cache, problems) -> dict:
+    from repro.core.stencil import laplace_jacobi
+    spec = laplace_jacobi(2)
+    kw = dict(bc=BC, rtol=RTOL, check_every=CHECK_EVERY, max_iters=MAX_ITERS)
+    # prime: compile the bucket entry + the operand signature once
+    cache.solve(spec, problems[0][0], source=problems[0][1], **kw)
+    lat = []
+    for x0, src in problems:
+        t0 = time.perf_counter()
+        res = cache.solve(spec, x0, source=src, **kw)
+        lat.append(time.perf_counter() - t0)
+        assert res.converged
+    return _row("warm-serial", lat, sum(lat), cached=True, coalesced=False,
+                backend=res.backend,
+                cache_hit_rate=cache.stats.hit_rate)
+
+
+async def _coalesced(engine, spec, problems):
+    t_all = time.perf_counter()
+
+    async def one(x0, src):
+        t0 = time.perf_counter()
+        res = await engine.submit(
+            spec, x0, bc=BC, source=src, rtol=RTOL,
+            check_every=CHECK_EVERY, max_iters=MAX_ITERS)
+        return time.perf_counter() - t0, res
+
+    out = await asyncio.gather(*(one(x0, src) for x0, src in problems))
+    wall = time.perf_counter() - t_all
+    return out, wall
+
+
+def _warm_coalesced(cache, problems) -> dict:
+    from repro.core.stencil import laplace_jacobi
+    from repro.serve import ServingEngine
+
+    async def main():
+        eng = ServingEngine(cache, max_batch=len(problems), max_wait=0.05,
+                            max_queue=4 * len(problems))
+        async with eng:
+            # prime the batched loop signature (warm means warm)
+            await _coalesced(eng, laplace_jacobi(2),
+                             _problems(len(problems), GRID, seed=11))
+            out, wall = await _coalesced(eng, laplace_jacobi(2), problems)
+        return eng, out, wall
+
+    eng, out, wall = asyncio.run(main())
+    lat = [t for t, _ in out]
+    assert all(r.converged for _, r in out)
+    return _row("warm-coalesced", lat, wall, cached=True, coalesced=True,
+                backend=out[0][1].backend, batches=eng.stats.batches,
+                mean_batch=eng.stats.mean_batch,
+                cache_hit_rate=cache.stats.hit_rate)
+
+
+def _near_miss(cache, n: int) -> dict:
+    from repro.core.stencil import laplace_jacobi
+    spec = laplace_jacobi(2)
+    compile_before = cache.stats.compile_seconds
+    lat = []
+    for x0, src in _problems(n, NEAR_MISS_GRID, seed=7):
+        t0 = time.perf_counter()
+        res = cache.solve(spec, x0, source=src, bc=BC, rtol=RTOL,
+                          check_every=CHECK_EVERY, max_iters=MAX_ITERS)
+        lat.append(time.perf_counter() - t0)
+        assert res.converged
+    row = _row("pad-to-bucket", lat, sum(lat), cached=True, coalesced=False)
+    row.update(grid=list(NEAR_MISS_GRID), bucket=list(GRID),
+               cache_hit=cache.stats.compile_seconds == compile_before,
+               cache_hit_rate=cache.stats.hit_rate)
+    return row
+
+
+def run(smoke: bool = False) -> tuple[list[str], dict]:
+    """(CSV rows, ``serving/...`` metrics) for the benchmark runner."""
+    from repro.core.plan_cache import PlanCache
+
+    n_cold = 2 if smoke else 3
+    n_warm = 4 if smoke else 6
+    n_coal = 8 if smoke else 16
+
+    cache = PlanCache(capacity=16)
+    cold = _cold_serial(_problems(n_cold, GRID, seed=1))
+    warm = _warm_serial(cache, _problems(n_warm, GRID, seed=2))
+    coal = _warm_coalesced(cache, _problems(n_coal, GRID, seed=3))
+    near = _near_miss(cache, 2)
+
+    speedup = {
+        "coalesced_vs_cold": coal["solves_per_sec"] / cold["solves_per_sec"],
+        "warm_serial_vs_cold": (warm["solves_per_sec"]
+                                / cold["solves_per_sec"]),
+        "target": SPEEDUP_TARGET,
+    }
+    speedup["pass"] = speedup["coalesced_vs_cold"] >= SPEEDUP_TARGET
+    cache_row = cache.stats.as_dict()
+    cache_row["entries"] = len(cache)
+
+    prefix = "serving/table1-64x64"
+    metrics = {
+        f"{prefix}/cold-serial": cold,
+        f"{prefix}/warm-serial": warm,
+        f"{prefix}/warm-coalesced": coal,
+        "serving/table1-60x60/pad-to-bucket": near,
+        f"{prefix}/speedup": speedup,
+        f"{prefix}/cache": cache_row,
+    }
+    rows = [
+        csv_row(f"serving-{r['requests']}x-{name}",
+                1.0 / r["solves_per_sec"],
+                f"{r['solves_per_sec']:.2f}/s p50={r['p50_ms']:.0f}ms "
+                f"p99={r['p99_ms']:.0f}ms")
+        for name, r in (("cold-serial", cold), ("warm-serial", warm),
+                        ("warm-coalesced", coal), ("pad-to-bucket", near))
+    ]
+    rows.append(csv_row(
+        "serving-speedup", 0.0,
+        f"coalesced {speedup['coalesced_vs_cold']:.1f}x vs cold (target "
+        f"{SPEEDUP_TARGET:.0f}x: {'PASS' if speedup['pass'] else 'FAIL'})"))
+    return rows, metrics
+
+
+def validate_serving(data: dict) -> list[str]:
+    """Errors in an artifact's ``serving`` section; [] means valid.
+
+    Accepts a full BENCH_stencil.json (schema 7) or the mini artifact
+    ``--json`` writes.  Enforces the acceptance bar (warm-coalesced >= 5x
+    cold-serial solves/sec) and rejects empty-dict benchmark sections
+    anywhere in the payload (a silently-skipped section must be omitted,
+    not recorded as ``{}``).
+    """
+    errors: list[str] = []
+    if "schema" in data and data["schema"] not in (7,):
+        errors.append(f"schema {data['schema']!r} != 7")
+    for section, content in data.items():
+        if isinstance(content, dict) and not content:
+            errors.append(f"empty-dict section {section!r} (omit instead)")
+    sv = data.get("serving")
+    if not isinstance(sv, dict) or not sv:
+        return errors + ["missing or empty 'serving' section"]
+    for kind in ("cold-serial", "warm-serial", "warm-coalesced"):
+        rows = [m for k, m in sv.items() if k.endswith("/" + kind)]
+        if not rows:
+            errors.append(f"no serving/*/{kind} row")
+            continue
+        for m in rows:
+            for field in ("solves_per_sec", "p50_ms", "p99_ms", "requests"):
+                if not (isinstance(m.get(field), (int, float))
+                        and m[field] > 0):
+                    errors.append(f"{kind}: missing/non-positive {field!r}")
+            if kind != "cold-serial" and "cache_hit_rate" not in m:
+                errors.append(f"{kind}: missing cache_hit_rate")
+    speed = [m for k, m in sv.items() if k.endswith("/speedup")]
+    if not speed:
+        errors.append("no serving/*/speedup row")
+    for m in speed:
+        if m.get("pass") is not True:
+            errors.append(
+                f"speedup acceptance failed: coalesced_vs_cold="
+                f"{m.get('coalesced_vs_cold')} < target {m.get('target')}")
+    return errors
+
+
+def main(argv=None) -> int:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer requests (CI tier)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a mini artifact {schema, serving}")
+    ap.add_argument("--validate", default=None, metavar="PATH",
+                    help="validate an artifact's serving section and exit")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        with open(args.validate) as f:
+            errors = validate_serving(json.load(f))
+        for e in errors:
+            print(f"INVALID: {e}")
+        print(f"{args.validate}: serving section "
+              f"{'INVALID' if errors else 'OK'}")
+        return 1 if errors else 0
+
+    rows, metrics = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row, flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 7, "serving": metrics}, f, indent=2,
+                      sort_keys=True)
+        print(f"# wrote {len(metrics)} serving rows to {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -19,10 +19,16 @@
 #                              adjoint gradient tests plus the learned-
 #                              stencil training example (must reach a 10x
 #                              loss reduction with a checkpoint round-trip)
+#   scripts/ci.sh --serve-smoke
+#                              run the serving gate: plan-cache + engine
+#                              tests, then the serving benchmark in smoke
+#                              mode and its section validation (coalesced
+#                              throughput must clear the 5x-vs-cold bar)
 #
-# Both test tiers refresh BENCH_stencil.json (schema 6: us_per_call +
-# interpreted_rows + solver + multigrid + autotune + scaling + adjoint) so the
-# perf trajectory and the cost-model regression tests in
+# Both test tiers refresh BENCH_stencil.json (schema 7: us_per_call +
+# interpreted_rows + solver + multigrid + autotune + scaling + adjoint +
+# serving; sections a run didn't produce are omitted, never written as {})
+# so the perf trajectory and the cost-model regression tests in
 # tests/solver/test_cost_model.py stay anchored to this host, and both run
 # the tune-check so a stale/illegal tuned table fails CI.
 set -euo pipefail
@@ -54,6 +60,16 @@ adjoint_smoke() {
   python examples/learned_stencil.py --smoke --steps 80 --assert-decreasing
 }
 
+serve_smoke() {
+  echo "== serving smoke (plan cache + coalescing engine + 5x acceptance) =="
+  python -m pytest -x -q tests/serve
+  local out
+  out="$(mktemp /tmp/BENCH_serving_smoke.XXXXXX.json)"
+  python -m benchmarks.serving_bench --smoke --json "$out"
+  python -m benchmarks.serving_bench --validate "$out"
+  rm -f "$out"
+}
+
 if [[ "${1:-}" == "--tune-check" ]]; then
   tune_check
   exit 0
@@ -63,18 +79,22 @@ elif [[ "${1:-}" == "--scaling-smoke" ]]; then
 elif [[ "${1:-}" == "--adjoint-smoke" ]]; then
   adjoint_smoke
   exit 0
+elif [[ "${1:-}" == "--serve-smoke" ]]; then
+  serve_smoke
+  exit 0
 elif [[ "${1:-}" == "--all" ]]; then
   tune_check
   echo "== full test suite (matrix + solver + distributed tiers) =="
   python -m pytest -x -q
   scaling_smoke
   adjoint_smoke
-  echo "== stencil benchmark (table1 + fig6 + multigrid + autotune + scaling + adjoint) =="
-  python -m benchmarks.run --only table1_2d fig6_3d multigrid autotune scaling adjoint --json BENCH_stencil.json
+  serve_smoke
+  echo "== stencil benchmark (table1 + fig6 + multigrid + autotune + scaling + adjoint + serving) =="
+  python -m benchmarks.run --only table1_2d fig6_3d multigrid autotune scaling adjoint serving --json BENCH_stencil.json
 else
   tune_check
   echo "== fast test tier (-m 'not slow') =="
   python -m pytest -x -q -m "not slow"
   echo "== stencil benchmark (fast) =="
-  python -m benchmarks.run --fast --only table1_2d multigrid autotune adjoint --json BENCH_stencil.json
+  python -m benchmarks.run --fast --only table1_2d multigrid autotune adjoint serving --json BENCH_stencil.json
 fi

@@ -68,6 +68,13 @@ from repro.core.multigrid import (
     red_black_step,
     restriction_spec,
 )
+from repro.core.plan_cache import (
+    CachedSolver,
+    CacheStats,
+    PlanCache,
+    default_plan_cache,
+    set_default_plan_cache,
+)
 from repro.core.plan import (
     BACKENDS,
     BackendSupport,
@@ -95,9 +102,12 @@ __all__ = [
     "BackendSupport",
     "DIFF_BACKENDS",
     "BoundaryMode",
+    "CacheStats",
+    "CachedSolver",
     "DirichletBC",
     "MGResult",
     "Multigrid",
+    "PlanCache",
     "SolveResult",
     "Solver",
     "StencilPlan",
@@ -106,7 +116,9 @@ __all__ = [
     "TunedTable",
     "WeightField",
     "autotune_cell",
+    "default_plan_cache",
     "default_tuned_table",
+    "set_default_plan_cache",
     "set_default_tuned_table",
     "shape_bucket",
     "spec_family",

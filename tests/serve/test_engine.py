@@ -1,0 +1,190 @@
+"""Serving-engine tests (serve/engine.py) — coalescing, admission, fan-out.
+
+The contract under test: a request submitted through the engine resolves to
+*exactly* the result a standalone cached solve would produce (coalescing is
+an execution detail, not a semantic one); compatible concurrent requests
+share one batched dispatch; incompatible ones split into groups; overload is
+rejected fast with a reason; multigrid requests route through the same cache.
+
+All engine interaction goes through ``asyncio.run`` so the tests carry no
+event-loop plugin dependency.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import PlanCache, laplace_jacobi
+from repro.serve import EngineStats, RejectedError, ServingEngine
+
+GRID = (12, 12)
+BC = 0.5
+KW = dict(bc=BC, rtol=1e-4, check_every=10, max_iters=2000)
+
+
+def _x0(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(GRID).astype(np.float32)
+    shell = np.ones(GRID, np.float32)
+    shell[tuple(slice(1, -1) for _ in GRID)] = 0.0
+    return x * (1.0 - shell) + BC * shell
+
+
+def _cache():
+    return PlanCache(probe=False)
+
+
+def test_round_trip_matches_direct_solve():
+    cache = _cache()
+    x0 = _x0()
+
+    async def main():
+        async with ServingEngine(cache, max_wait=0.0) as eng:
+            return await eng.submit(laplace_jacobi(2), x0, **KW)
+
+    res = asyncio.run(main())
+    want = cache.solve(laplace_jacobi(2), x0, **KW)
+    assert res.converged
+    assert np.array_equal(np.asarray(res.x), np.asarray(want.x))
+    assert res.iterations == want.iterations
+    assert res.x.shape == GRID
+
+
+def test_coalescing_is_exact_and_batches_once():
+    cache = _cache()
+    problems = [_x0(seed=s) for s in range(5)]
+
+    async def main():
+        eng = ServingEngine(cache, max_batch=8, max_wait=0.1)
+        async with eng:
+            results = await asyncio.gather(
+                *(eng.submit(laplace_jacobi(2), x0, **KW)
+                  for x0 in problems))
+        return eng, results
+
+    eng, results = asyncio.run(main())
+    assert eng.stats.batches == 1
+    assert eng.stats.coalesced == 5
+    assert eng.stats.mean_batch == 5.0
+    for x0, res in zip(problems, results):
+        want = cache.solve(laplace_jacobi(2), x0, **KW)
+        assert np.array_equal(np.asarray(res.x), np.asarray(want.x))
+        assert res.iterations == want.iterations
+        assert res.converged == want.converged
+        # the batch runs until its slowest member converges, so a request's
+        # history column may extend past its own convergence point (frozen
+        # residuals) — never the other way around
+        assert (res.residual_history.shape[0]
+                >= want.residual_history.shape[0])
+
+
+def test_per_request_sources_coalesce():
+    cache = _cache()
+    rng = np.random.default_rng(9)
+    srcs = [None, (rng.standard_normal(GRID) * 1e-2).astype(np.float32)]
+
+    async def main():
+        async with ServingEngine(cache, max_batch=4, max_wait=0.1) as eng:
+            return await asyncio.gather(
+                *(eng.submit(laplace_jacobi(2), _x0(seed=i), source=s, **KW)
+                  for i, s in enumerate(srcs)))
+
+    results = asyncio.run(main())
+    for i, (src, res) in enumerate(zip(srcs, results)):
+        want = cache.solve(laplace_jacobi(2), _x0(seed=i), source=src, **KW)
+        assert np.array_equal(np.asarray(res.x), np.asarray(want.x))
+
+
+def test_incompatible_requests_split_groups():
+    cache = _cache()
+
+    async def main():
+        eng = ServingEngine(cache, max_batch=8, max_wait=0.1)
+        async with eng:
+            results = await asyncio.gather(
+                eng.submit(laplace_jacobi(2), _x0(0), **KW),
+                eng.submit(laplace_jacobi(2), _x0(1), **dict(KW, rtol=1e-5)))
+        return eng, results
+
+    eng, results = asyncio.run(main())
+    assert all(r.converged for r in results)
+    assert eng.stats.batches == 2   # different convergence cfg -> two solves
+    assert eng.stats.completed == 2
+
+
+def test_backpressure_rejects_with_reason():
+    cache = _cache()
+
+    async def main():
+        async with ServingEngine(cache, max_queue=1, max_wait=0.0) as eng:
+            eng.pause()
+            first = asyncio.ensure_future(
+                eng.submit(laplace_jacobi(2), _x0(0), **KW))
+            await asyncio.sleep(0.05)   # first is admitted and held
+            with pytest.raises(RejectedError) as exc:
+                await eng.submit(laplace_jacobi(2), _x0(1), **KW)
+            eng.resume()
+            res = await first
+            return eng, res, exc.value
+
+    eng, res, err = asyncio.run(main())
+    assert res.converged
+    assert "queue full" in err.reason and "max_queue=1" in err.reason
+    assert eng.stats.rejected == 1 and eng.stats.accepted == 1
+
+
+def test_submit_after_stop_rejects():
+    cache = _cache()
+
+    async def main():
+        eng = ServingEngine(cache)
+        await eng.start()
+        await eng.stop()
+        with pytest.raises(RejectedError):
+            await eng.submit(laplace_jacobi(2), _x0(), **KW)
+
+    asyncio.run(main())
+
+
+def test_multigrid_routes_through_cache():
+    cache = _cache()
+    x0 = np.zeros((17, 17), np.float32)
+
+    async def main():
+        async with ServingEngine(cache, max_wait=0.0) as eng:
+            # sequential: the second dispatch must hit the cached hierarchy
+            r1 = await eng.submit(laplace_jacobi(2), x0, method="multigrid",
+                                  bc=0.0, rtol=1e-4)
+            r2 = await eng.submit(laplace_jacobi(2), x0 + 0.1,
+                                  method="multigrid", bc=0.0, rtol=1e-4)
+        return r1, r2
+
+    r1, r2 = asyncio.run(main())
+    assert r1.converged and r2.converged
+    assert any(k[0] == "multigrid" for k in cache.keys())
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+
+
+def test_input_validation():
+    async def main():
+        async with ServingEngine(_cache()) as eng:
+            with pytest.raises(ValueError, match="bare"):
+                await eng.submit(laplace_jacobi(2),
+                                 np.zeros((2, *GRID), np.float32), **KW)
+            with pytest.raises(ValueError, match="method"):
+                await eng.submit(laplace_jacobi(2), _x0(), method="sor",
+                                 **KW)
+            with pytest.raises(ValueError, match="scalar"):
+                await eng.submit(laplace_jacobi(2), _x0(),
+                                 bc=np.zeros(GRID))  # type: ignore[arg-type]
+
+    asyncio.run(main())
+
+
+def test_stats_as_dict_and_constructor_validation():
+    d = EngineStats(accepted=3, completed=2, batches=1).as_dict()
+    assert d["accepted"] == 3 and d["mean_batch"] == 2.0
+    with pytest.raises(ValueError):
+        ServingEngine(_cache(), max_batch=0)
+    with pytest.raises(ValueError):
+        ServingEngine(_cache(), max_queue=0)
